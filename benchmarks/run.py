@@ -1,0 +1,58 @@
+"""Benchmark driver: one experiment per paper table/figure + the TPU
+roofline table.  ``python -m benchmarks.run [--quick]``."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args(argv)
+
+    from benchmarks import (act_schedules, compute_floor, max_synops,
+                            stage1_sparsity, stage2_partitioning,
+                            tpu_roofline, traffic_mapping, weight_format,
+                            weight_sparsity)
+
+    mods = [
+        ("fig2_3_weight_sparsity", weight_sparsity),
+        ("fig4_weight_format", weight_format),
+        ("fig5_act_schedules", act_schedules),
+        ("fig6_max_synops", max_synops),
+        ("fig7_compute_floor", compute_floor),
+        ("fig8_traffic_mapping", traffic_mapping),
+        ("fig10_11_stage1", stage1_sparsity),
+        ("fig12_stage2", stage2_partitioning),
+        ("tpu_roofline", tpu_roofline),
+    ]
+    results = {}
+    stage1_res = None
+    for name, mod in mods:
+        if args.only and args.only not in name:
+            continue
+        t0 = time.time()
+        if mod is stage2_partitioning:
+            res = mod.run(args.quick, stage1=stage1_res)
+        else:
+            res = mod.run(args.quick)
+        if mod is stage1_sparsity:
+            stage1_res = res
+            res = {k: v for k, v in res.items() if not k.startswith("_")}
+        dt = time.time() - t0
+        print(mod.report(res))
+        print(f"   [{name} done in {dt:.1f}s]\n")
+        results[name] = res
+
+    with open("benchmarks/results.json", "w") as f:
+        json.dump(results, f, indent=1, default=float)
+    print("wrote benchmarks/results.json")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

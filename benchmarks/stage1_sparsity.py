@@ -1,0 +1,301 @@
+"""Fig 10 + Fig 11: stage-1 sparsity-aware training -> accuracy/sparsity
+Pareto -> deployed performance at iso-accuracy.
+
+Four workload recipes (paper §VII-A), scaled to run in minutes:
+  * AKD1000  — Tl1 activation regularization on a ReLU classifier,
+               applied to the pre-trained baseline;
+  * Speck    — synops-regularized training, deployed as IF spiking;
+  * PilotNet — per-layer sigma-delta threshold targets (vs uniform);
+  * S5       — one-shot magnitude pruning + fine-tune sweep.
+Deployment numbers come from the neuromorphic simulator on the trained
+weights (real activations -> real event counts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import workloads as W
+from repro.neuromorphic.network import SimLayer, SimNetwork
+from repro.neuromorphic.platform import (akd1000_like, loihi2_like,
+                                         speck_like)
+from repro.neuromorphic.timestep import simulate
+from repro.sparsity import (calibrate_thresholds, magnitude_prune_masks,
+                            apply_masks, synops_loss, tl1_regularizer)
+from repro.train.data import SyntheticDenoise, SyntheticImages
+
+
+# ------------------------------------------------------------ tiny trainers
+
+def _mlp_init(key, sizes):
+    ps = []
+    for i in range(len(sizes) - 1):
+        k1, key = jax.random.split(key)
+        ps.append(jax.random.normal(k1, (sizes[i], sizes[i + 1]))
+                  / np.sqrt(sizes[i]))
+    return ps
+
+
+def _mlp_fwd(ps, x):
+    acts = []
+    h = x
+    for i, w in enumerate(ps):
+        h = h @ w
+        if i < len(ps) - 1:
+            h = jax.nn.relu(h)
+            acts.append(h)
+    return h, acts
+
+
+def _train_mlp(loss_fn, ps, data_iter, steps, lr=3e-3):
+    opt = [jax.tree.map(jnp.zeros_like, ps), jax.tree.map(jnp.zeros_like, ps)]
+
+    @jax.jit
+    def step(ps, m, v, batch, t):
+        (l, aux), g = jax.value_and_grad(loss_fn, has_aux=True)(ps, batch)
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
+        ps = jax.tree.map(
+            lambda p, mm, vv: p - lr * mm / (jnp.sqrt(vv) + 1e-8), ps, m, v)
+        return ps, m, v, l, aux
+    m, v = opt
+    aux = {}
+    for t in range(steps):
+        ps, m, v, l, aux = step(ps, m, v, data_iter(t), t)
+    return ps, aux
+
+
+def _deploy_fc(ps, *, neuron_model="relu", thresholds=None,
+               sends_deltas=False, masks=None):
+    layers = []
+    for i, w in enumerate(ps):
+        wi = np.asarray(w, np.float32)
+        if masks is not None:
+            wi = wi * np.asarray(masks[i], np.float32)
+        layers.append(SimLayer(
+            name=f"fc{i}", kind="fc", weights=wi,
+            neuron_model=neuron_model if i < len(ps) - 1 else
+            ("sd_relu" if neuron_model == "sd_relu" else "relu"),
+            threshold=(thresholds[i] if thresholds is not None else
+                       (1.0 if neuron_model == "if" else 0.0)),
+            sends_deltas=sends_deltas and i < len(ps) - 1))
+    return SimNetwork(layers=layers, in_size=int(ps[0].shape[0]))
+
+
+# ------------------------------------------------------------ experiments
+
+def akd1000_tl1(quick=False) -> list[dict]:
+    """Tl1 sweep on a pre-trained ReLU classifier (AKD1000 recipe)."""
+    data = SyntheticImages(hw=8, channels=2, global_batch=64, seed=0)
+    def batches(t):
+        b = data.batch(t)
+        return (jnp.asarray(b["x"].reshape(64, -1)), jnp.asarray(b["y"]))
+    sizes = [128, 384, 384, 10]       # hidden layers carry the synops
+    steps = 60 if quick else 200
+
+    def ce(ps, batch, lam):
+        x, y = batch
+        logits, acts = _mlp_fwd(ps, x)
+        l = jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+        reg = tl1_regularizer(acts) if lam else 0.0
+        return l + lam * reg, {"ce": l}
+
+    ps0, _ = _train_mlp(functools.partial(ce, lam=0.0),
+                        _mlp_init(jax.random.PRNGKey(0), sizes),
+                        batches, steps)
+    rows = []
+    for lam in [0.0, 0.01, 0.03, 0.1, 0.3]:
+        ps, _ = _train_mlp(functools.partial(ce, lam=lam), ps0, batches,
+                           steps // 2)
+        xb, yb = batches(999)
+        logits, acts = _mlp_fwd(ps, xb)
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == yb))
+        dens = float(np.mean([np.mean(np.asarray(a) > 0) for a in acts]))
+        net = _deploy_fc(ps)
+        xs = np.asarray(xb[:4])
+        r = simulate(net, np.maximum(xs, 0), akd1000_like())
+        rows.append({"lam": lam, "acc": acc, "act_density": dens,
+                     "time": r.time_per_step, "energy": r.energy_per_step,
+                     "baseline": lam == 0.0})
+    return rows
+
+
+def speck_synops(quick=False) -> list[dict]:
+    data = SyntheticImages(hw=16, channels=2, global_batch=64, seed=1)
+    def batches(t):
+        b = data.batch(t)
+        return (jnp.asarray(b["x"].reshape(64, -1)), jnp.asarray(b["y"]))
+    sizes = [512, 96, 10]
+    steps = 60 if quick else 200
+    fanouts = [sizes[i + 2] if i + 2 < len(sizes) else 1
+               for i in range(len(sizes) - 2)]
+
+    def ce(ps, batch, lam):
+        x, y = batch
+        logits, acts = _mlp_fwd(ps, x)
+        l = jnp.mean(-jax.nn.log_softmax(logits)[jnp.arange(len(y)), y])
+        reg = synops_loss(acts, fanouts) if lam else 0.0
+        return l + lam * reg, {"ce": l}
+
+    rows = []
+    for lam in [0.0, 0.03, 0.1, 0.3]:
+        ps, _ = _train_mlp(functools.partial(ce, lam=lam),
+                           _mlp_init(jax.random.PRNGKey(1), sizes),
+                           batches, steps)
+        xb, yb = batches(999)
+        logits, acts = _mlp_fwd(ps, xb)
+        acc = float(jnp.mean(jnp.argmax(logits, -1) == yb))
+        dens = float(np.mean([np.mean(np.asarray(a) > 0) for a in acts]))
+        net = _deploy_fc(ps, neuron_model="if")
+        xs = np.tile(np.maximum(np.asarray(xb[:1]), 0) / 4.0, (4, 1))
+        r = simulate(net, xs, speck_like())
+        rows.append({"lam": lam, "acc": acc, "act_density": dens,
+                     "time": r.time_per_step, "energy": r.energy_per_step,
+                     "baseline": lam == 0.0})
+    return rows
+
+
+def pilotnet_thresholds(quick=False) -> list[dict]:
+    """Uniform Σ-Δ threshold (baseline [46]) vs per-layer sparsity targets."""
+    data = SyntheticDenoise(n_features=64, seq_len=24, global_batch=16,
+                            seed=2)
+    sizes = [64, 96, 320, 64]         # imbalanced widths (CNN-like taper)
+    steps = 60 if quick else 200
+
+    def mse(ps, batch):
+        x, y = batch
+        pred, _ = _mlp_fwd(ps, x)
+        return jnp.mean((pred - y) ** 2), {}
+
+    def batches(t):
+        b = data.batch(t)
+        return (jnp.asarray(b["noisy"].reshape(-1, 64)),
+                jnp.asarray(b["clean"].reshape(-1, 64)))
+    ps, _ = _train_mlp(mse, _mlp_init(jax.random.PRNGKey(2), sizes),
+                       batches, steps)
+
+    # temporal sequence for Σ-Δ: one sample's 24 frames
+    b = data.batch(1234)
+    seq = np.asarray(b["noisy"][0], np.float32)          # (24, 64)
+    clean = np.asarray(b["clean"][0], np.float32)
+
+    # per-layer activation deltas from a reference run
+    h = jnp.asarray(seq)
+    deltas = []
+    for i, w in enumerate(ps[:-1]):
+        h = jax.nn.relu(h @ w)
+        deltas.append(np.diff(np.asarray(h), axis=0).reshape(-1))
+
+    rows = []
+    uni = calibrate_thresholds([np.concatenate(deltas)], 0.7)[0]
+    # per-layer targets: equalize each layer's DOWNSTREAM synops
+    # (messages_i x fanout_i) — the M0 neurocore-aware quantity — at the
+    # same total message budget as the uniform setting
+    widths = np.array(sizes[1:-1], float)          # emitting layers
+    fanout = np.array(sizes[2:], float)
+    budget = 0.3 * float(np.sum(widths))           # total messages @ s=0.7
+    w_inv = 1.0 / fanout
+    dens = budget * w_inv / np.sum(widths * w_inv)
+    tgt = np.clip(1.0 - dens, 0.05, 0.98)
+    per = calibrate_thresholds(deltas, [float(t) for t in tgt])
+    for name, thetas in [("uniform-baseline", [uni] * (len(sizes) - 1)),
+                         ("per-layer-targets", per + [per[-1]])]:
+        thetas = list(thetas)[:len(sizes) - 1] + [1e-6]
+        net = _deploy_fc(ps, neuron_model="sd_relu", thresholds=thetas,
+                         sends_deltas=True)
+        r = simulate(net, seq, loihi2_like())
+        mse_v = float(np.mean((r.outputs - clean) ** 2))
+        rows.append({"setting": name, "mse": mse_v,
+                     "time": r.time_per_step, "energy": r.energy_per_step,
+                     "imbalance": r.metrics.synops.imbalance,
+                     "baseline": name == "uniform-baseline"})
+    return rows
+
+
+def s5_pruning(quick=False) -> list[dict]:
+    data = SyntheticDenoise(n_features=64, seq_len=24, global_batch=16,
+                            seed=3)
+    sizes = [64, 128, 128, 64]
+    steps = 60 if quick else 200
+
+    def batches(t):
+        b = data.batch(t)
+        return (jnp.asarray(b["noisy"].reshape(-1, 64)),
+                jnp.asarray(b["clean"].reshape(-1, 64)))
+
+    def mse(ps, batch, masks=None):
+        x, y = batch
+        pz = ps if masks is None else [w * m for w, m in zip(ps, masks)]
+        pred, _ = _mlp_fwd(pz, x)
+        return jnp.mean((pred - y) ** 2), {}
+
+    ps, _ = _train_mlp(mse, _mlp_init(jax.random.PRNGKey(3), sizes),
+                       batches, steps)
+    rows = []
+    for s in [0.0, 0.2, 0.4, 0.6, 0.8]:
+        masks = jax.tree.leaves(magnitude_prune_masks(
+            {f"w{i}": w for i, w in enumerate(ps)}, s))
+        tuned, _ = _train_mlp(functools.partial(mse, masks=masks), ps,
+                              batches, steps // 3)
+        tuned = [w * m for w, m in zip(tuned, masks)]
+        xb, yb = batches(999)
+        pred, _ = _mlp_fwd(tuned, xb)
+        mse_v = float(jnp.mean((pred - yb) ** 2))
+        net = _deploy_fc([np.asarray(w) for w in tuned],
+                         neuron_model="ssm")
+        b = data.batch(1234)
+        r = simulate(net, np.asarray(b["noisy"][0]), loihi2_like())
+        rows.append({"sparsity": s, "mse": mse_v, "time": r.time_per_step,
+                     "energy": r.energy_per_step, "baseline": s == 0.0,
+                     "params": ps, "masks": masks, "tuned": tuned})
+    return rows
+
+
+def _iso_speedup(rows, *, acc_key="acc", higher_better=True,
+                 tol=0.02):
+    base = next(r for r in rows if r["baseline"])
+    ok = [r for r in rows if not r["baseline"] and (
+        r[acc_key] >= base[acc_key] - tol if higher_better
+        else r[acc_key] <= base[acc_key] * (1 + tol) + 1e-6)]
+    if not ok:
+        return None, base, None
+    best = min(ok, key=lambda r: r["time"])
+    return (base["time"] / best["time"], base,
+            {**best, "energy_gain": base["energy"] / best["energy"]})
+
+
+def run(quick: bool = False) -> dict:
+    out = {}
+    out["akd1000"] = [
+        {k: v for k, v in r.items()} for r in akd1000_tl1(quick)]
+    out["speck"] = speck_synops(quick)
+    out["pilotnet"] = pilotnet_thresholds(quick)
+    s5_rows = s5_pruning(quick)
+    out["s5"] = [{k: v for k, v in r.items()
+                  if k not in ("params", "masks", "tuned")} for r in s5_rows]
+    out["_s5_full"] = s5_rows          # used by stage2
+    speed = {}
+    speed["akd1000"] = _iso_speedup(out["akd1000"])[0]
+    speed["speck"] = _iso_speedup(out["speck"])[0]
+    pb = out["pilotnet"]
+    speed["pilotnet"] = pb[0]["time"] / pb[1]["time"]
+    speed["s5"] = _iso_speedup(out["s5"], acc_key="mse",
+                               higher_better=False, tol=0.3)[0]
+    out["iso_speedups"] = speed
+    return out
+
+
+def report(res: dict) -> str:
+    lines = ["## Fig 10/11 — stage-1 sparsity training"]
+    for wl in ("akd1000", "speck", "pilotnet", "s5"):
+        s = res["iso_speedups"][wl]
+        lines.append(f"  {wl:9s} iso-accuracy deployed speedup: "
+                     f"{s if s is None else round(s, 2)}x "
+                     f"(paper: akd 4.29x, speck 1.01x, pilot 2.23x, "
+                     f"s5 1.74x)")
+    return "\n".join(lines)

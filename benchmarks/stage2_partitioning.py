@@ -1,0 +1,103 @@
+"""Fig 12 + §VII-C: stage-2 floorline-informed partitioning/mapping on the
+stage-1 winners, and the combined two-stage totals."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import stage1_sparsity as s1
+from benchmarks import workloads as W
+from repro.core.partitioner import optimize_partitioning
+from repro.neuromorphic.noc import ordered_mapping
+from repro.neuromorphic.partition import minimal_partition
+from repro.neuromorphic.platform import loihi2_like
+from repro.neuromorphic.timestep import simulate
+from repro.train.data import SyntheticDenoise
+
+
+def _optimize(net, prof, xs):
+    def evaluate(part, mapping):
+        return simulate(net, xs, prof, part, mapping)
+    return optimize_partitioning(net, prof, evaluate)
+
+
+def run(quick: bool = False, stage1=None) -> dict:
+    stage1 = stage1 or s1.run(quick)
+    prof = loihi2_like()
+    data = SyntheticDenoise(n_features=64, seq_len=24, global_batch=16,
+                            seed=3)
+    seq = np.asarray(data.batch(1234)["noisy"][0], np.float32)
+    out = {}
+
+    # ---- S5: sparse star network, packed into fewer cores ----------------
+    s5_rows = stage1["_s5_full"]
+    base_row = next(r for r in s5_rows if r["baseline"])
+    # star: sparsest network within MSE budget
+    ok = [r for r in s5_rows if r["mse"] <= base_row["mse"] * 1.3 + 1e-6
+          and not r["baseline"]]
+    star = max(ok, key=lambda r: r["sparsity"]) if ok else s5_rows[1]
+    net_base = s1._deploy_fc([np.asarray(w) for w in base_row["tuned"]],
+                             neuron_model="ssm")
+    net_star = s1._deploy_fc([np.asarray(w) for w in star["tuned"]],
+                             neuron_model="ssm")
+    # paper baseline: dense minimal partition + ordered mapping
+    p0 = minimal_partition(net_base, prof)
+    r_base = simulate(net_base, seq, prof, p0, ordered_mapping(p0, prof))
+    opt = _optimize(net_star, prof, seq)
+    out["s5"] = {
+        "baseline_time": r_base.time_per_step,
+        "baseline_energy": r_base.energy_per_step,
+        "stage1_time": next(
+            h.time for h in [opt.history[0]]),
+        "final_time": opt.report.time_per_step,
+        "final_energy": opt.report.energy_per_step,
+        "iterations": [
+            {"it": h.iteration, "assumption": h.assumption.value,
+             "move": h.move, "time": h.time, "energy": h.energy,
+             "max_synops": h.max_synops, "accepted": h.accepted}
+            for h in opt.history],
+        "stage2_speedup": opt.history[0].time / opt.report.time_per_step,
+        "combined_speedup": r_base.time_per_step / opt.report.time_per_step,
+        "combined_energy": r_base.energy_per_step /
+        opt.report.energy_per_step,
+    }
+
+    # ---- PilotNet-like: per-layer-threshold star, then partition ---------
+    pb = stage1["pilotnet"]
+    # rebuild the per-layer-targets network for partition optimization
+    rows = s1.pilotnet_thresholds(quick)
+    net_p, prof_p = W.pilotnet_sim(seed=1)      # structural stand-in
+    xs = W.sim_inputs(net_p, 0.3, 3 if quick else 5, seed=2)
+    p0 = minimal_partition(net_p, prof_p)
+    r_base = simulate(net_p, xs, prof_p, p0, ordered_mapping(p0, prof_p))
+    opt = _optimize(net_p, prof_p, xs)
+    out["pilotnet"] = {
+        "baseline_time": r_base.time_per_step,
+        "final_time": opt.report.time_per_step,
+        "stage2_speedup": opt.history[0].time / opt.report.time_per_step,
+        "combined_speedup": (pb[0]["time"] / pb[1]["time"]) *
+        (opt.history[0].time / opt.report.time_per_step),
+        "iterations": [
+            {"it": h.iteration, "assumption": h.assumption.value,
+             "move": h.move, "time": h.time, "accepted": h.accepted}
+            for h in opt.history],
+    }
+    return out
+
+
+def report(res: dict) -> str:
+    lines = ["## Fig 12 / §VII-C — stage-2 partitioning + combined"]
+    s5 = res["s5"]
+    lines.append(f"  s5       stage2 {s5['stage2_speedup']:.2f}x "
+                 f"(paper 1.83x); combined vs manual baseline "
+                 f"{s5['combined_speedup']:.2f}x time, "
+                 f"{s5['combined_energy']:.2f}x energy "
+                 "(paper 1.99x / 3.38x)")
+    pn = res["pilotnet"]
+    lines.append(f"  pilotnet stage2 {pn['stage2_speedup']:.2f}x "
+                 f"(paper 1.73x); combined {pn['combined_speedup']:.2f}x "
+                 "(paper 3.86x)")
+    n_acc = sum(1 for h in s5["iterations"] if h["accepted"])
+    lines.append(f"  s5 optimizer: {len(s5['iterations'])} iterations, "
+                 f"{n_acc} accepted (traces the memory slope)")
+    return "\n".join(lines)

@@ -1,0 +1,57 @@
+"""§Roofline: the 32-cell x 2-mesh table from the committed dry-run
+artifacts (experiments/dryrun/*.json).  Single-pod is the roofline table
+per the assignment; multipod rows prove the `pod` axis shards."""
+
+from __future__ import annotations
+
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..",
+                          "experiments", "dryrun")
+
+
+def load_records(mesh: str = "pod") -> list[dict]:
+    recs = []
+    if not os.path.isdir(DRYRUN_DIR):
+        return recs
+    for f in sorted(os.listdir(DRYRUN_DIR)):
+        if f.endswith(f"__{mesh}.json"):
+            recs.append(json.load(open(os.path.join(DRYRUN_DIR, f))))
+    return recs
+
+
+def run(quick: bool = False) -> dict:
+    recs = load_records("pod")
+    rows = []
+    for r in recs:
+        t = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"],
+            "t_compute": t["t_compute_s"], "t_memory": t["t_memory_s"],
+            "t_collective": t["t_collective_s"], "bound": t["bound_s"],
+            "dominant": t["dominant"],
+            "useful_ratio": t["useful_flops_ratio"],
+            "roofline_fraction": t["roofline_fraction"],
+        })
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    return {"rows": rows, "dominant_counts": dom,
+            "n_multipod_ok": len(load_records("multipod"))}
+
+
+def report(res: dict) -> str:
+    lines = ["## §Roofline — single-pod (16x16) terms per cell",
+             f"{'arch':22s} {'shape':12s} {'compute':>9s} {'memory':>9s} "
+             f"{'collect':>9s} {'bound(s)':>9s} {'dom':8s} {'useful':>7s} "
+             f"{'roofl%':>7s}"]
+    for r in res["rows"]:
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['t_compute']:9.4f} "
+            f"{r['t_memory']:9.4f} {r['t_collective']:9.4f} "
+            f"{r['bound']:9.4f} {r['dominant']:8s} "
+            f"{r['useful_ratio']:7.3f} {r['roofline_fraction']*100:6.1f}%")
+    lines.append(f"dominant-term counts: {res['dominant_counts']}; "
+                 f"multipod cells compiled: {res['n_multipod_ok']}")
+    return "\n".join(lines)

@@ -1,0 +1,119 @@
+"""The four paper workloads (Table II) as simulator networks + their
+JAX-trainable counterparts for the stage-1 sparsity experiments.
+
+Sizes are scaled down from the paper's (Imagenette-AkidaNet etc.) so the
+whole benchmark suite runs in minutes on one CPU — the validation targets
+are the paper's *trends and ratios* (its own results are normalized too).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.neuromorphic.network import (SimLayer, SimNetwork, fc_network,
+                                        make_inputs, programmed_fc_network)
+from repro.neuromorphic.platform import (akd1000_like, loihi2_like,
+                                         speck_like)
+
+
+# ------------------------------------------------------------ sim networks
+
+def conv_net(in_hw=(16, 16), cin=2, channels=(8, 16, 32), fc_out=10, *,
+             neuron_model="relu", weight_density=1.0, act_gates=None,
+             force_active=False, seed=0, weight_format=None,
+             sends_deltas=False, threshold=0.0) -> SimNetwork:
+    """Small CNN in the AkidaNet/PilotNet mold (3x3 convs stride 2 + fc)."""
+    rng = np.random.default_rng(seed)
+    from repro.neuromorphic.network import _exact_density_mask
+    layers = []
+    h, w = in_hw
+    c_prev = cin
+    for i, c in enumerate(channels):
+        wgt = rng.normal(0, 1.0 / np.sqrt(9 * c_prev),
+                         (3, 3, c_prev, c)).astype(np.float32)
+        wgt *= _exact_density_mask(wgt.shape, weight_density, rng)
+        gate = None
+        if act_gates is not None:
+            n = c * (h // 2) * (w // 2)
+            gate = _exact_density_mask((n,), act_gates[i], rng)
+        layers.append(SimLayer(
+            name=f"conv{i}", kind="conv", weights=wgt, stride=2,
+            in_hw=(h, w), neuron_model=neuron_model, msg_gate=gate,
+            force_active=force_active, weight_format=weight_format,
+            sends_deltas=sends_deltas, threshold=threshold))
+        h, w, c_prev = h // 2, w // 2, c
+    fanin = h * w * c_prev
+    wfc = rng.normal(0, 1.0 / np.sqrt(fanin),
+                     (fanin, fc_out)).astype(np.float32)
+    from repro.neuromorphic.network import _exact_density_mask as edm
+    wfc *= edm(wfc.shape, weight_density, rng)
+    gate = (edm((fc_out,), act_gates[-1], rng)
+            if act_gates is not None else None)
+    layers.append(SimLayer(name="fc", kind="fc", weights=wfc,
+                           neuron_model=neuron_model, msg_gate=gate,
+                           force_active=force_active,
+                           weight_format=weight_format))
+    return SimNetwork(layers=layers, in_size=np.prod(in_hw) * cin)
+
+
+def akidanet_sim(**kw):
+    return conv_net(in_hw=(16, 16), cin=2, channels=(8, 16, 32), **kw), \
+        akd1000_like()
+
+
+def speck_sim(**kw):
+    kw.setdefault("neuron_model", "if")
+    kw.setdefault("threshold", 1.0)
+    return conv_net(in_hw=(16, 16), cin=2, channels=(8, 16), **kw), \
+        speck_like()
+
+
+def pilotnet_sim(**kw):
+    kw.setdefault("neuron_model", "sd_relu")
+    kw.setdefault("sends_deltas", True)
+    return conv_net(in_hw=(16, 16), cin=2, channels=(8, 16, 32), fc_out=1,
+                    **kw), loihi2_like()
+
+
+def s5_sim(sizes=(64, 128, 128, 128, 64), **kw):
+    kw.setdefault("neuron_model", "ssm")
+    net = fc_network(list(sizes), **kw)
+    return net, loihi2_like()
+
+
+def s5_programmed(sizes=(64, 128, 128, 128, 64), *, weight_densities,
+                  act_densities, seed=0, weight_format=None):
+    net = programmed_fc_network(
+        list(sizes), weight_densities=weight_densities,
+        act_densities=act_densities, seed=seed, weight_format=weight_format,
+        neuron_model="ssm")
+    return net, loihi2_like()
+
+
+def sim_inputs(net: SimNetwork, density: float, steps: int = 6,
+               seed: int = 0) -> np.ndarray:
+    return make_inputs(net.in_size, density, steps, seed)
+
+
+# ------------------------------------------------------- schedule helpers
+
+def schedule(name: str, n_layers: int, total: float) -> list[float]:
+    """Per-layer activation DENSITY schedules with (approximately) the same
+    network-mean density ``total`` (paper Fig. 5): Uniform / LoHi /
+    Increasing / Decreasing."""
+    t = float(total)
+    if name == "uniform":
+        d = [t] * n_layers
+    elif name == "lohi":
+        d = [min(2 * t, 1.0) if i % 2 == 0 else max(2 * t - 1.0, 0.0)
+             if 2 * t > 1 else 0.0 for i in range(n_layers)]
+        # re-center to hit the mean
+        gap = t - float(np.mean(d))
+        d = [min(max(x + gap, 0.0), 1.0) for x in d]
+    elif name == "increasing":
+        d = list(np.clip(np.linspace(0.2 * t, 1.8 * t, n_layers), 0, 1))
+    elif name == "decreasing":
+        d = list(np.clip(np.linspace(1.8 * t, 0.2 * t, n_layers), 0, 1))
+    else:
+        raise ValueError(name)
+    return [float(x) for x in d]

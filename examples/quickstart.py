@@ -1,0 +1,53 @@
+"""Quickstart: the paper's floorline analysis + two-stage optimization on a
+simulated Loihi-2-like chip, end to end, in under a minute.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+
+from repro.core.floorline import WorkloadPoint, fit_floorline
+from repro.core.partitioner import optimize_partitioning
+from repro.neuromorphic.network import fc_network, make_inputs
+from repro.neuromorphic.noc import ordered_mapping
+from repro.neuromorphic.partition import minimal_partition
+from repro.neuromorphic.platform import loihi2_like
+from repro.neuromorphic.timestep import simulate
+
+
+def main():
+    prof = loihi2_like()
+
+    # 1. a sparse 4-layer network on the simulated chip -------------------
+    net = fc_network([128, 256, 256, 64], weight_density=0.5, seed=0)
+    xs = make_inputs(128, density=0.3, steps=5, seed=1)
+    part = minimal_partition(net, prof)
+    base = simulate(net, xs, prof, part, ordered_mapping(part, prof))
+    print("baseline:", base.summary())
+
+    # 2. place it on the floorline ----------------------------------------
+    pts = []
+    for dens in (0.8, 0.5, 0.3, 0.1, 0.05):
+        r = simulate(net, make_inputs(128, dens, 5, seed=2), prof)
+        pts.append(WorkloadPoint(r.max_synops, r.max_acts, r.time_per_step,
+                                 r.energy_per_step, label=f"d={dens}"))
+    model = fit_floorline(pts)
+    p = WorkloadPoint(base.max_synops, base.max_acts, base.time_per_step)
+    print(f"floorline: state={model.classify(p).value}; "
+          f"move: {model.recommend(p).action}")
+
+    # 3. stage-2: floorline-informed partitioning/mapping ------------------
+    res = optimize_partitioning(
+        net, prof, lambda pa, ma: simulate(net, xs, prof, pa, ma))
+    print(f"optimized: {res.report.summary()}")
+    print(f"speedup vs baseline: "
+          f"{base.time_per_step / res.report.time_per_step:.2f}x in "
+          f"{len(res.history)} iterations "
+          f"({sum(h.accepted for h in res.history)} accepted)")
+    for h in res.history[:6]:
+        print(f"  it{h.iteration} [{h.assumption.value:7s}] {h.move:42s} "
+              f"t={h.time:9.1f} {'ACCEPT' if h.accepted else 'backtrack'}")
+
+
+if __name__ == "__main__":
+    main()

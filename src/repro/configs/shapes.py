@@ -1,0 +1,80 @@
+"""Shape cells and abstract input specs for the dry-run.
+
+Each architecture is paired with its own shape set (from the assignment):
+
+  train_4k     seq_len=4096    global_batch=256   -> lowers train_step
+  prefill_32k  seq_len=32768   global_batch=32    -> lowers prefill
+  decode_32k   seq_len=32768   global_batch=128   -> lowers serve_step
+                                                      (1 token, 32k KV cache)
+  long_500k    seq_len=524288  global_batch=1     -> serve_step; run only for
+                                                      sub-quadratic archs
+
+``input_specs`` returns ShapeDtypeStruct stand-ins only — no allocation —
+matching exactly what launch/dryrun.py lowers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelCfg
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+TRAIN_4K = ShapeSpec("train_4k", 4_096, 256, "train")
+PREFILL_32K = ShapeSpec("prefill_32k", 32_768, 32, "prefill")
+DECODE_32K = ShapeSpec("decode_32k", 32_768, 128, "decode")
+LONG_500K = ShapeSpec("long_500k", 524_288, 1, "decode")
+
+FULL_ATTN_SHAPES = {s.name: s for s in (TRAIN_4K, PREFILL_32K, DECODE_32K)}
+SUBQUAD_SHAPES = {s.name: s
+                  for s in (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def lm_input_specs(cfg: ModelCfg, shape: ShapeSpec,
+                   microbatch: int | None = None) -> dict:
+    """Abstract inputs for a decoder-only LM cell.
+
+    train/prefill: {"tokens", "labels"[, "frontend_embeds"]}
+    decode:        {"tokens" (B,1), "pos" scalar} (cache specs come from
+                   jax.eval_shape(init_cache) in the launcher).
+    """
+    B = microbatch or shape.global_batch
+    S = shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32),
+                "pos": sds((), jnp.int32)}
+    specs = {}
+    F = cfg.frontend_tokens if cfg.frontend != "none" else 0
+    if F:
+        specs["frontend_embeds"] = sds((B, F, cfg.d_model), jnp.bfloat16)
+    specs["tokens"] = sds((B, S - F), jnp.int32)
+    specs["labels"] = sds((B, S), jnp.int32)
+    return specs
+
+
+def encdec_input_specs(cfg, shape: ShapeSpec,
+                       microbatch: int | None = None) -> dict:
+    B = microbatch or shape.global_batch
+    S = shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": sds((B, 1), jnp.int32),
+                "pos": sds((), jnp.int32)}
+    return {"frontend_embeds": sds((B, cfg.n_frames, cfg.d_model),
+                                   jnp.bfloat16),
+            "tokens": sds((B, S), jnp.int32),
+            "labels": sds((B, S), jnp.int32)}

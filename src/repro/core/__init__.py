@@ -1,0 +1,17 @@
+"""The paper's primary contribution: bound-and-bottleneck analysis, the
+floorline performance model, and the two-stage optimization methodology."""
+
+from repro.core.analytical import (Bottleneck, LayerConfig, OpCosts, OpCounts,
+                                   layer_op_counts, min_cores_for_layer,
+                                   predict_bottleneck)
+from repro.core.floorline import (FloorlineModel, OptimizationMove,
+                                  WorkloadPoint, fit_floorline, floorline_curve)
+from repro.core.metrics import LoadStats, WorkloadMetrics, proxy_gap
+
+__all__ = [
+    "Bottleneck", "LayerConfig", "OpCosts", "OpCounts", "layer_op_counts",
+    "min_cores_for_layer", "predict_bottleneck",
+    "FloorlineModel", "OptimizationMove", "WorkloadPoint", "fit_floorline",
+    "floorline_curve",
+    "LoadStats", "WorkloadMetrics", "proxy_gap",
+]

@@ -1,0 +1,332 @@
+"""Trip-count-aware cost analysis of compiled (post-SPMD) HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts each ``while`` body ONCE,
+regardless of trip count (verified empirically — see EXPERIMENTS.md §Dry-run
+notes).  Framework code built on ``lax.scan`` (layer stacking, microbatch
+gradient accumulation, chunked attention) is therefore massively
+under-counted.  This module re-derives per-chip costs from the HLO text:
+
+  1. split the module into named computations and build a per-computation
+     SSA symbol table (instruction -> result shape),
+  2. find every `while`, resolve its condition computation's loop bound
+     (compare-against-constant pattern) -> trip count,
+  3. propagate multipliers entry->leaves: while/call bodies scale by trips;
+     fusion sub-computations inherit the FLOP multiplier but contribute no
+     HBM bytes (fused intermediates never touch HBM),
+  4. per op: dot FLOPs = 2 * prod(result) * contraction_extent;
+     HBM bytes = operand + result bytes of material ops;
+     collective bytes = operand bytes by kind.
+
+Shapes in the partitioned module are per-shard, so every number is
+per-chip.  This is the "profile" the §Perf hillclimb reads (the dry-run
+equivalent of a wall-clock trace).  Elementwise FLOPs are not counted (dots
+dominate every cell by construction; transcendentals are visible in XLA's
+own cost_analysis for cross-checking).
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import math
+import re
+from typing import Optional
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "s4": 1, "u4": 1,
+}
+
+_NAME_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(
+    r"^(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s([a-z][\w\-]*)\(")
+_WHILE_ATTRS = re.compile(r"(condition|body)=%?([\w\.\-]+)")
+_CALLS_RE = re.compile(r"(?:to_apply|calls)=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_NOBYTE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "after-all", "partition-id", "replica-id",
+               "get-dimension-size", "domain", "opt-barrier", "while",
+               "conditional", "call"}
+
+
+def _shape_list(type_str: str) -> list[tuple[str, str]]:
+    return _SHAPE_RE.findall(type_str)
+
+
+def _bytes_of(shapes: list[tuple[str, str]]) -> int:
+    total = 0
+    for dtype, dims in shapes:
+        b = _DTYPE_BYTES.get(dtype)
+        if b is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def _args_segment(line: str, op_end: int) -> str:
+    """Text inside the op's balanced call parens."""
+    depth = 0
+    start = None
+    for i in range(op_end - 1, len(line)):
+        c = line[i]
+        if c == "(":
+            if depth == 0:
+                start = i + 1
+            depth += 1
+        elif c == ")":
+            depth -= 1
+            if depth == 0:
+                return line[start:i]
+    return line[op_end:]
+
+
+def _split_computations(text: str):
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if line and not line[0].isspace() and "{" in line and "->" in line:
+            m = _NAME_RE.match(line)
+            if m:
+                cur = m.group(2)
+                comps[cur] = []
+                if m.group(1):
+                    entry = cur
+        elif cur is not None:
+            s = line.strip()
+            if s == "}":
+                cur = None
+            else:
+                comps[cur].append(s)
+    return comps, entry
+
+
+def _trip_count(cond_lines: list[str]) -> int:
+    consts = []
+    for line in cond_lines:
+        if "compare(" in line or "constant(" in line:
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+    return max(consts) if consts else 1
+
+
+_PARAM_RE = re.compile(r"parameter\((\d+)\)")
+_SLICERS = {"dynamic-slice", "slice", "gather"}
+
+
+def _fusion_io_bytes(sub: str, parsed, symtab, operands, tab,
+                     rbytes: int) -> int:
+    """Bytes a fusion moves: operands consumed only by slice/gather ops
+    inside the fused computation contribute their slice-result bytes, not
+    the full operand (XLA reads just the window); a fusion whose ROOT is a
+    dynamic-update-slice writes only the update window (the big buffer is
+    aliased in place), so the result contributes 2x update bytes."""
+    instrs = parsed.get(sub)
+    if instrs is None:
+        return rbytes + _bytes_of([s for o in operands
+                                   for s in tab.get(o, [])])
+    stab = symtab[sub]
+    param_name: dict[int, str] = {}
+    consumers: dict[str, list[tuple[str, str]]] = {}
+    dus_updates = 0
+    for name, op, ops_, line in instrs:
+        pm = _PARAM_RE.search(line)
+        if op == "parameter" and pm:
+            param_name[int(pm.group(1))] = name
+        if op == "dynamic-update-slice" and len(ops_) > 1:
+            dus_updates += _bytes_of(stab.get(ops_[1], []))
+        for o in ops_:
+            consumers.setdefault(o, []).append((op, name))
+    total = 0
+    for i, o in enumerate(operands):
+        full = _bytes_of(tab.get(o, []))
+        pname = param_name.get(i)
+        cons = consumers.get(pname, []) if pname else []
+        if cons and all(c_op in _SLICERS for c_op, _ in cons):
+            total += sum(_bytes_of(stab.get(c_name, []))
+                         for _, c_name in cons)
+        elif (cons and dus_updates
+              and all(c_op == "dynamic-update-slice" for c_op, _ in cons)):
+            total += dus_updates        # in-place buffer: read ~update only
+        else:
+            total += full
+    if dus_updates and dus_updates < rbytes:
+        total += dus_updates            # write = update window, not buffer
+    else:
+        total += rbytes
+    return total
+
+
+def _is_score_like(shapes: list[tuple[str, str]]) -> bool:
+    """Attention-score-shaped: the two trailing dims are both >= 512 and
+    the tensor is >= 4 Mi elements (S x S or S x kv_chunk blocks)."""
+    for _, dims in shapes:
+        d = [int(x) for x in dims.split(",") if x]
+        if len(d) >= 2 and d[-1] >= 512 and d[-2] >= 512 \
+                and math.prod(d) >= 4 * 2**20:
+            return True
+    return False
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    score_bytes: float = 0.0        # subset of hbm_bytes: VMEM-resident on
+                                    # TPU under kernels/flash_attn
+    collective_bytes: float = 0.0
+    bytes_by_kind: dict = dataclasses.field(default_factory=dict)
+    count_by_kind: dict = dataclasses.field(default_factory=dict)
+    while_trips: dict = dataclasses.field(default_factory=dict)
+    top_collectives: list = dataclasses.field(default_factory=list)
+    top_dots: list = dataclasses.field(default_factory=list)
+    top_hbm: list = dataclasses.field(default_factory=list)
+
+
+def analyze(text: str) -> HloCost:
+    comps, entry = _split_computations(text)
+    cost = HloCost()
+
+    parsed: dict[str, list[tuple[str, str, list[str], str]]] = {}
+    symtab: dict[str, dict[str, list[tuple[str, str]]]] = {}
+    edges: dict[str, list[tuple[str, float, bool]]] = {c: [] for c in comps}
+
+    for cname, lines in comps.items():
+        tab: dict[str, list[tuple[str, str]]] = {}
+        instrs = []
+        for line in lines:
+            m = _INSTR_RE.match(line)
+            if not m:
+                continue
+            name, type_str, op = m.groups()
+            tab[name] = _shape_list(type_str)
+            args = _args_segment(line, m.end())
+            operands = re.findall(r"%([\w\.\-]+)", args)
+            instrs.append((name, op, operands, line))
+            if op == "while":
+                attrs = dict(_WHILE_ATTRS.findall(line))
+                body, cond = attrs.get("body"), attrs.get("condition")
+                if body and cond:
+                    t = _trip_count(comps.get(cond, []))
+                    cost.while_trips[body] = t
+                    edges[cname].append((body, float(t), False))
+                continue
+            for sub in _CALLS_RE.findall(line):
+                if sub in comps:
+                    edges[cname].append((sub, 1.0, op == "fusion"))
+        parsed[cname] = instrs
+        symtab[cname] = tab
+
+    m_flops: dict[str, float] = collections.defaultdict(float)
+    m_bytes: dict[str, float] = collections.defaultdict(float)
+    roots = [entry] if entry in comps else []
+    if not roots:
+        called = {s for subs in edges.values() for s, _, _ in subs}
+        roots = [c for c in comps if c not in called]
+    queue = collections.deque((r, 1.0, 1.0) for r in roots)
+    budget = 5_000_000
+    while queue and budget > 0:
+        budget -= 1
+        cname, mf, mb = queue.popleft()
+        m_flops[cname] += mf
+        m_bytes[cname] += mb
+        for sub, t, is_fusion in edges.get(cname, []):
+            if sub != cname:
+                queue.append((sub, mf * t, 0.0 if is_fusion else mb * t))
+
+    coll_sizes: list[tuple[str, float]] = []
+    dot_sizes: list[tuple[str, float]] = []
+    hbm_sizes: list[tuple[str, float]] = []
+    for cname, instrs in parsed.items():
+        mf, mb = m_flops.get(cname, 0.0), m_bytes.get(cname, 0.0)
+        if mf <= 0 and mb <= 0:
+            continue
+        tab = symtab[cname]
+        for name, op, operands, line in instrs:
+            rshapes = tab.get(name, [])
+            if op == "dot" and mf > 0:
+                rsize = 0
+                for dt, dims in rshapes:
+                    n = 1
+                    for d in dims.split(","):
+                        if d:
+                            n *= int(d)
+                    rsize += n
+                lhs = tab.get(operands[0], []) if operands else []
+                contract = 1
+                cm = _CONTRACT_RE.search(line)
+                if cm and cm.group(1) and lhs:
+                    ldims = [int(d) for d in lhs[0][1].split(",") if d]
+                    for i in cm.group(1).split(","):
+                        contract *= ldims[int(i)]
+                f = 2.0 * rsize * contract
+                cost.flops += mf * f
+                dot_sizes.append((f"x{mf:.0f} {line[:110]}", mf * f))
+            if op in _NOBYTE_OPS or mb <= 0:
+                continue
+            rbytes = _bytes_of(rshapes)
+            # slice-type ops touch only the moved window, not the operand
+            if op in ("dynamic-slice", "slice"):
+                bytes_touched = 2 * rbytes
+            elif op == "dynamic-update-slice":
+                upd = (_bytes_of(tab.get(operands[1], []))
+                       if len(operands) > 1 else rbytes)
+                bytes_touched = 2 * upd
+            elif op == "gather":
+                idx = (_bytes_of(tab.get(operands[1], []))
+                       if len(operands) > 1 else 0)
+                bytes_touched = 2 * rbytes + idx
+            elif op == "scatter":
+                upd = (_bytes_of(tab.get(operands[2], []))
+                       if len(operands) > 2 else rbytes)
+                bytes_touched = 2 * upd
+            elif op == "broadcast":
+                bytes_touched = rbytes
+            elif op == "fusion":
+                subs = _CALLS_RE.findall(line)
+                bytes_touched = (
+                    _fusion_io_bytes(subs[0], parsed, symtab, operands, tab,
+                                     rbytes)
+                    if subs else
+                    rbytes + _bytes_of([s for o in operands
+                                        for s in tab.get(o, [])]))
+            else:
+                obytes = _bytes_of([s for o in operands
+                                    for s in tab.get(o, [])])
+                bytes_touched = obytes + rbytes
+            cost.hbm_bytes += mb * bytes_touched
+            # score-like tensors (two trailing seq dims): on the TPU target
+            # these stay in VMEM inside the flash-attention Pallas kernel
+            # (kernels/flash_attn); CPU fusion boundaries materialize them.
+            if _is_score_like(rshapes) or any(
+                    _is_score_like(tab.get(o, [])) for o in operands):
+                cost.score_bytes += mb * bytes_touched
+            hbm_sizes.append((f"x{mb:.0f} {line[:110]}", mb * bytes_touched))
+            base = op.replace("-start", "")
+            if base in _COLLECTIVES and not op.endswith("-done"):
+                obytes = _bytes_of([s for o in operands
+                                    for s in tab.get(o, [])])
+                cbytes = obytes if obytes else rbytes
+                cost.collective_bytes += mb * cbytes
+                cost.bytes_by_kind[base] = (cost.bytes_by_kind.get(base, 0)
+                                            + mb * cbytes)
+                cost.count_by_kind[base] = (cost.count_by_kind.get(base, 0)
+                                            + mb)
+                coll_sizes.append((f"{base} x{mb:.0f} {line[:100]}",
+                                   mb * cbytes))
+    coll_sizes.sort(key=lambda x: -x[1])
+    dot_sizes.sort(key=lambda x: -x[1])
+    hbm_sizes.sort(key=lambda x: -x[1])
+    cost.top_collectives = coll_sizes[:12]
+    cost.top_dots = dot_sizes[:12]
+    cost.top_hbm = hbm_sizes[:12]
+    return cost

@@ -1,0 +1,217 @@
+"""Floorline-informed partitioning & mapping optimization (paper §VI-B).
+
+The paper's stage-2 procedure, verbatim in structure:
+
+1. Initialize at the minimum neurocore utilization with a good heuristic
+   (strided) mapping — likely memory-bound.
+2. **Memory assumption**: find the core with the most synops, partition its
+   layer further.  If the step helps, keep tracing down the memory slope;
+   if not, *backtrack* (greater utilization without synop improvement costs
+   power).
+3. **Compute assumption**: same loop keyed on max activation computes.
+4. **Traffic assumption**: improve the mapping (move the highest-output
+   cores onto separate router paths — here: re-stride / traffic-greedy map).
+5. Cycle through the assumptions; stop when out of cores, when energy
+   worsens without timing benefit, or when no assumption yields improvement
+   (the workload hit its true boundary for its sparsity dynamics).
+
+The evaluator is any callable (partition, mapping) -> SimReport, so the same
+optimizer drives the neuromorphic simulator and, through an adapter, the TPU
+sharding hillclimb in :mod:`repro.distributed.autoshard`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+from repro.core.analytical import Bottleneck
+from repro.neuromorphic.network import SimNetwork
+from repro.neuromorphic.noc import Mapping, strided_mapping
+from repro.neuromorphic.partition import (Partition, max_cores_for_layer,
+                                          minimal_partition, validate_partition)
+from repro.neuromorphic.platform import ChipProfile
+from repro.neuromorphic.timestep import SimReport
+
+Evaluator = Callable[[Partition, Mapping], SimReport]
+
+
+@dataclasses.dataclass
+class OptStep:
+    """One accepted/rejected move in the iteration log (EXPERIMENTS §Perf
+    mirrors this structure for the TPU hillclimb)."""
+
+    iteration: int
+    assumption: Bottleneck
+    move: str
+    partition: Partition
+    time: float
+    energy: float
+    max_synops: float
+    accepted: bool
+    note: str = ""
+
+
+@dataclasses.dataclass
+class OptimizationResult:
+    partition: Partition
+    mapping: Mapping
+    report: SimReport
+    history: list[OptStep]
+
+    @property
+    def trace(self) -> list[tuple[float, float]]:
+        """(max_synops, time) path of accepted steps — the floorline trace."""
+        pts = [(s.max_synops, s.time) for s in self.history if s.accepted]
+        return pts
+
+
+def _argmax_layer(per_core: np.ndarray, part: Partition) -> int:
+    """Layer owning the max-loaded core (the M0 bottleneck unit)."""
+    core_layers = part.core_layer_ids()
+    return int(core_layers[int(np.argmax(per_core))])
+
+
+def _bottleneck_layers(per_core: np.ndarray, part: Partition,
+                       tie_tol: float = 0.05) -> list[int]:
+    """All layers owning a core within ``tie_tol`` of the max load.  The
+    paper splits the single argmax layer; when several layers tie (uniform
+    workloads) a single split cannot move the global max, so we split the
+    tied set together — a strict generalization that reduces to the paper's
+    move when the max is unique."""
+    core_layers = part.core_layer_ids()
+    mx = float(np.max(per_core))
+    hot = np.asarray(per_core) >= (1.0 - tie_tol) * mx
+    return sorted({int(l) for l in core_layers[hot]})
+
+
+def _splittable(net: SimNetwork, part: Partition, layer: int,
+                profile: ChipProfile) -> bool:
+    if part.cores[layer] >= max_cores_for_layer(net, layer):
+        return False
+    if part.total_cores + 1 > profile.n_cores:
+        return False
+    return validate_partition(net, part.split(layer), profile)
+
+
+def optimize_partitioning(
+    net: SimNetwork,
+    profile: ChipProfile,
+    evaluate: Evaluator,
+    *,
+    max_iters: int = 64,
+    time_improvement_tol: float = 0.01,
+    energy_guard: bool = True,
+    make_mapping: Callable[[Partition, ChipProfile], Mapping] = strided_mapping,
+) -> OptimizationResult:
+    """Run the §VI-B iterative backtracking procedure."""
+    part = minimal_partition(net, profile)
+    mapping = make_mapping(part, profile)
+    best = evaluate(part, mapping)
+    history: list[OptStep] = [OptStep(
+        iteration=0, assumption=Bottleneck.MEMORY, move="init:minimal+strided",
+        partition=part, time=best.time_per_step, energy=best.energy_per_step,
+        max_synops=best.max_synops, accepted=True, note="baseline")]
+
+    assumptions = [Bottleneck.MEMORY, Bottleneck.COMPUTE, Bottleneck.TRAFFIC]
+    a_idx = 0
+    stale = 0          # consecutive assumptions with no accepted move
+    it = 0
+    while it < max_iters and stale < len(assumptions):
+        it += 1
+        assumption = assumptions[a_idx]
+        accepted = False
+        if assumption in (Bottleneck.MEMORY, Bottleneck.COMPUTE):
+            per_core = (best.per_core_synops if assumption is Bottleneck.MEMORY
+                        else best.per_core_acts)
+            layers = [l for l in _bottleneck_layers(per_core, part)
+                      if _splittable(net, part, l, profile)]
+            cand_part = part
+            for l in layers:
+                if validate_partition(net, cand_part.split(l), profile):
+                    cand_part = cand_part.split(l)
+            if cand_part.cores != part.cores:
+                cand_map = make_mapping(cand_part, profile)
+                rep = evaluate(cand_part, cand_map)
+                time_gain = (best.time_per_step - rep.time_per_step) \
+                    / max(best.time_per_step, 1e-30)
+                energy_ok = (not energy_guard
+                             or rep.energy_per_step <= best.energy_per_step
+                             or time_gain > time_improvement_tol)
+                if time_gain > time_improvement_tol and energy_ok:
+                    part, mapping, best = cand_part, cand_map, rep
+                    accepted = True
+                history.append(OptStep(
+                    iteration=it, assumption=assumption,
+                    move=(f"split layers {layers} -> "
+                          f"{[cand_part.cores[l] for l in layers]} cores"),
+                    partition=cand_part, time=rep.time_per_step,
+                    energy=rep.energy_per_step, max_synops=rep.max_synops,
+                    accepted=accepted,
+                    note="" if accepted else "backtracked (no benefit)"))
+            else:
+                history.append(OptStep(
+                    iteration=it, assumption=assumption, move="no split available",
+                    partition=part, time=best.time_per_step,
+                    energy=best.energy_per_step, max_synops=best.max_synops,
+                    accepted=False, note="out of cores / granularity"))
+        else:   # TRAFFIC: optimize the mapping only (synops intensity fixed)
+            cand_map = _traffic_greedy_mapping(part, profile, best)
+            if tuple(cand_map.phys) != tuple(mapping.phys):
+                rep = evaluate(part, cand_map)
+                gain = (best.time_per_step - rep.time_per_step) \
+                    / max(best.time_per_step, 1e-30)
+                if gain > time_improvement_tol:
+                    mapping, best = cand_map, rep
+                    accepted = True
+                history.append(OptStep(
+                    iteration=it, assumption=assumption,
+                    move=f"remap ({cand_map.name})", partition=part,
+                    time=rep.time_per_step, energy=rep.energy_per_step,
+                    max_synops=rep.max_synops, accepted=accepted,
+                    note="" if accepted else "backtracked"))
+            else:
+                history.append(OptStep(
+                    iteration=it, assumption=assumption, move="mapping unchanged",
+                    partition=part, time=best.time_per_step,
+                    energy=best.energy_per_step, max_synops=best.max_synops,
+                    accepted=False))
+        if accepted:
+            stale = 0            # keep working the same assumption
+        else:
+            stale += 1
+            a_idx = (a_idx + 1) % len(assumptions)
+
+    return OptimizationResult(partition=part, mapping=mapping, report=best,
+                              history=history)
+
+
+def _traffic_greedy_mapping(part: Partition, profile: ChipProfile,
+                            report: SimReport) -> Mapping:
+    """Traffic move (§VI-B): place the highest-output cores onto separate
+    router paths — greedy round-robin over router tiles by descending
+    message count, so hot cores never share a router's injection port."""
+    from repro.neuromorphic.noc import cores_per_router, n_router_tiles
+
+    n = part.total_cores
+    cpr = cores_per_router(profile)
+    n_routers = n_router_tiles(profile)
+    order = np.argsort(-report.per_core_msgs_out)      # busiest first
+    slots_by_router = [[r * cpr + s for s in range(cpr)]
+                       for r in range(n_routers)]
+    phys = [0] * n
+    r = 0
+    for logical in order:
+        placed = False
+        for _ in range(n_routers):
+            if slots_by_router[r]:
+                phys[int(logical)] = slots_by_router[r].pop(0)
+                r = (r + 1) % n_routers
+                placed = True
+                break
+            r = (r + 1) % n_routers
+        if not placed:
+            raise RuntimeError("ran out of physical slots")
+    return Mapping(tuple(phys), name="traffic_greedy")

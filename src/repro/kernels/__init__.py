@@ -1,0 +1,25 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper's dominant operation is event-driven synop accumulation: each
+active input message triggers a sparse weight fetch + accumulate.  TPUs have
+no efficient element-granular event path (the MXU wants dense 128x128 tiles),
+so the TPU-native adaptation is **block-granular** event-driven execution
+(see DESIGN.md §3):
+
+* ``event_matmul`` — block-sparse activation matmul: (m, k) tiles of the
+  activation whose entries are all below threshold skip both the weight-tile
+  fetch (HBM->VMEM DMA via scalar-prefetch index compaction) and the MXU
+  tile.  This is the synop-accumulation kernel.
+* ``sigma_delta`` — fused sigma-delta encoder (delta, threshold, quantize,
+  state update) producing the sparse message stream the paper's PilotNet
+  workload relies on [34], [46].
+
+Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
+(jit'd public wrapper with padding/validation) and ``ref.py`` (pure-jnp
+oracle used by the test sweeps).
+"""
+
+from repro.kernels.event_matmul.ops import block_activity, event_matmul
+from repro.kernels.sigma_delta.ops import sigma_delta_encode
+
+__all__ = ["event_matmul", "block_activity", "sigma_delta_encode"]

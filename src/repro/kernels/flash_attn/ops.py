@@ -1,0 +1,35 @@
+"""Jitted wrapper for the flash-attention kernel with shape padding."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attn.kernel import flash_attention_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: int | None = None, softcap: float | None = None,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = True) -> jax.Array:
+    """Pads Sq/Skv to block multiples, launches the kernel, slices back.
+    Padding keys are masked out via the causal/window mask for pad queries;
+    pad KV rows sit at positions > every real query and are causally
+    invisible."""
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    pq = (-Sq) % bq
+    pk = (-Skv) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    out = flash_attention_pallas(q, k, v, causal=causal, window=window,
+                                 softcap=softcap, bq=bq, bk=bk,
+                                 interpret=interpret)
+    return out[:, :Sq]

@@ -1,0 +1,42 @@
+"""Public jit'd wrapper for the fused sigma-delta encoder."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sigma_delta.kernel import sigma_delta_pallas
+
+
+@functools.partial(jax.jit, static_argnames=("theta", "bm", "bd", "interpret"))
+def sigma_delta_encode(a: jax.Array, s: jax.Array, *, theta: float,
+                       bm: int = 256, bd: int = 512,
+                       interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Sigma-delta encode activations against reconstruction state.
+
+    Args:
+      a: (..., D) new activations.
+      s: (..., D) reconstruction state (what downstream has accumulated).
+      theta: sigma-delta threshold (> 0).
+    Returns:
+      (q, s_new): quantized delta messages (sparse; mostly zeros for slowly
+      varying inputs) and the updated state s + q.
+    """
+    if theta <= 0:
+        raise ValueError("theta must be positive")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    shape = a.shape
+    a2 = a.reshape(-1, shape[-1])
+    s2 = s.reshape(-1, shape[-1])
+    M, D = a2.shape
+    pm, pd = (-M) % bm, (-D) % bd
+    if pm or pd:
+        a2 = jnp.pad(a2, ((0, pm), (0, pd)))
+        s2 = jnp.pad(s2, ((0, pm), (0, pd)))
+    q, s_new = sigma_delta_pallas(a2, s2, theta=theta, bm=bm, bd=bd,
+                                  interpret=interpret)
+    return (q[:M, :D].reshape(shape), s_new[:M, :D].reshape(shape))

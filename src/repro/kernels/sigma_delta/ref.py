@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused sigma-delta encoder."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def sigma_delta_ref(a: jnp.ndarray, s: jnp.ndarray, *, theta: float
+                    ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Reference semantics (f32 math, cast back to input dtypes)."""
+    a32 = a.astype(jnp.float32)
+    s32 = s.astype(jnp.float32)
+    delta = a32 - s32
+    q = jnp.where(jnp.abs(delta) >= theta,
+                  jnp.round(delta / theta) * theta, 0.0)
+    return q.astype(a.dtype), (s32 + q).astype(s.dtype)

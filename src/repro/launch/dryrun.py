@@ -1,0 +1,338 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: AOT lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first backend init): the dry-run — and only the dry-run — sees 512
+placeholder CPU devices so `jax.make_mesh` can build the production meshes.
+
+Per cell this lowers the real step function (train_step for train_4k,
+prefill for prefill_32k, serve_step for decode_*) with ShapeDtypeStruct
+inputs (zero allocation), compiles it, prints memory_analysis() (proves the
+cell fits) and cost_analysis() (FLOPs/bytes for EXPERIMENTS.md §Roofline),
+parses collective bytes from the compiled HLO, and writes a JSON artifact.
+
+  python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k --multi-pod
+  python -m repro.launch.dryrun --all --out experiments/dryrun -j 6
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import registry
+from repro.configs.shapes import ShapeSpec
+from repro.core import tpu_floorline as tfl
+from repro.distributed import sharding
+from repro.launch.mesh import make_mesh, make_production_mesh
+from repro.models import encdec, lm
+from repro.models.encdec import EncDecCfg
+from repro.train import optim, schedules, step as step_lib
+
+
+def _shardings(spec_tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree)
+
+
+def _mem_analysis(compiled) -> dict:
+    try:
+        m = compiled.memory_analysis()
+        if m is None:
+            return {}
+        return {
+            "argument_bytes": int(getattr(m, "argument_size_in_bytes", 0)),
+            "output_bytes": int(getattr(m, "output_size_in_bytes", 0)),
+            "temp_bytes": int(getattr(m, "temp_size_in_bytes", 0)),
+            "alias_bytes": int(getattr(m, "alias_size_in_bytes", 0)),
+            "generated_code_bytes": int(
+                getattr(m, "generated_code_size_in_bytes", 0)),
+        }
+    except Exception as e:                      # pragma: no cover
+        return {"error": str(e)}
+
+
+def _spec_bytes(abstract_tree, spec_tree, mesh) -> int:
+    """Per-device bytes of a sharded pytree (fallback accounting)."""
+    import numpy as np
+    total = 0
+    for x, s in zip(jax.tree.leaves(abstract_tree),
+                    jax.tree.leaves(spec_tree,
+                                    is_leaf=lambda t: isinstance(t, P))):
+        shards = 1
+        for entry in tuple(s):
+            for ax in (entry if isinstance(entry, tuple) else (entry,)):
+                if ax is not None:
+                    shards *= mesh.shape[ax]
+        total += int(np.prod(x.shape)) * x.dtype.itemsize // shards
+    return total
+
+
+def build_cell(arch_id: str, shape_name: str, mesh, *, smoke: bool = False,
+               microbatches: int | None = None, flags=None,
+               remat: str | None = None):
+    """Returns (fn, args, in_shardings, out_shardings, donate, meta)."""
+    import dataclasses as _dc
+    entry = registry.get(arch_id)
+    cfg = entry.smoke() if smoke else entry.config
+    if remat is not None:
+        cfg = _dc.replace(cfg, remat=remat)
+    shape = entry.shapes[shape_name]
+    if smoke:
+        shape = ShapeSpec(shape.name, seq_len=32,
+                          global_batch=max(8, 2 * mesh.devices.size),
+                          kind=shape.kind)
+    ctx = sharding.make_ctx(mesh, batch_size=shape.global_batch)
+    if flags is not None:
+        ctx = _dc.replace(ctx, flags=flags)
+    pspecs = sharding.param_specs(cfg, ctx)
+    init_p = encdec.init_params if entry.is_encdec else lm.init_params
+    aparams = jax.eval_shape(lambda: init_p(cfg, jax.random.PRNGKey(0)))
+    meta = {"arch": arch_id, "shape": shape_name, "kind": shape.kind,
+            "seq_len": shape.seq_len, "global_batch": shape.global_batch,
+            "n_chips": int(mesh.devices.size),
+            "params": int(cfg.param_count())}
+
+    if shape.kind == "train":
+        dp = ctx.dp_size
+        M = microbatches or max(1, shape.global_batch // dp)
+        lr = schedules.cosine(3e-4, 100, 10_000)
+        opt = optim.for_arch(cfg.param_count(), lr)
+        gspecs = sharding.grad_specs(aparams, pspecs, ctx)
+        accum_dt = ("bfloat16" if cfg.param_count() > 100e9 else "float32")
+        fn = step_lib.make_train_step(
+            cfg, ctx, opt, num_microbatches=M, grad_accum_dtype=accum_dt,
+            grad_spec_tree=gspecs)
+        astate = {
+            "params": aparams,
+            "opt": jax.eval_shape(opt.init, aparams),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        sspecs = step_lib.state_spec_tree(cfg, ctx, opt, aparams)
+        inputs = entry.input_specs(shape, cfg=cfg)
+        bspecs = sharding.batch_specs(inputs, ctx)
+        in_sh = (_shardings(sspecs, mesh), _shardings(bspecs, mesh))
+        mspec = jax.tree.map(lambda _: P(), jax.eval_shape(
+            lambda s, b: fn(s, b)[1], astate, inputs))
+        out_sh = (_shardings(sspecs, mesh), _shardings(mspec, mesh))
+        meta["microbatches"] = M
+        meta["optimizer"] = opt.name
+        meta["state_bytes_per_device"] = (
+            _spec_bytes(aparams, pspecs, mesh)
+            + _spec_bytes(astate["opt"],
+                          opt.state_specs(aparams, pspecs, ctx), mesh))
+        return fn, (astate, inputs), in_sh, out_sh, (0,), meta, cfg, shape
+
+    if shape.kind == "prefill":
+        fn = step_lib.make_prefill_step(cfg, ctx)
+        inputs = entry.input_specs(shape, cfg=cfg)
+        bspecs = sharding.batch_specs(inputs, ctx)
+        in_sh = (_shardings(pspecs, mesh), _shardings(bspecs, mesh))
+        meta["state_bytes_per_device"] = _spec_bytes(aparams, pspecs, mesh)
+        return (fn, (aparams, inputs), in_sh, None, (), meta, cfg, shape)
+
+    # decode: serve_step(params, cache, tokens, pos)
+    B = shape.global_batch
+    init_c = encdec.init_cache if entry.is_encdec else lm.init_cache
+    acache = jax.eval_shape(lambda: init_c(cfg, B, shape.seq_len))
+    cspec = (encdec.cache_spec(cfg, ctx) if entry.is_encdec
+             else lm.cache_spec(cfg, ctx))
+    fn = step_lib.make_serve_step(cfg, ctx)
+    toks = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    in_sh = (_shardings(pspecs, mesh), _shardings(cspec, mesh),
+             NamedSharding(mesh, P(ctx.dp_spec, None)),
+             NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(ctx.dp_spec, None)),
+              _shardings(cspec, mesh))
+    meta["state_bytes_per_device"] = (
+        _spec_bytes(aparams, pspecs, mesh)
+        + _spec_bytes(acache, cspec, mesh))
+    meta["cache_bytes_per_device"] = _spec_bytes(acache, cspec, mesh)
+    return fn, (aparams, acache, toks, pos), in_sh, out_sh, (1,), meta, cfg, shape
+
+
+def run_cell(arch_id: str, shape_name: str, *, multi_pod: bool,
+             out_dir: str | None, smoke: bool = False,
+             mesh_shape: tuple[int, ...] | None = None,
+             microbatches: int | None = None, flags=None,
+             remat: str | None = None, tag: str = "") -> dict:
+    if mesh_shape is not None:
+        axes = (("pod", "data", "model") if len(mesh_shape) == 3
+                else ("data", "model"))
+        mesh = make_mesh(mesh_shape, axes)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = ("multipod" if multi_pod else "pod") if mesh_shape is None \
+        else "x".join(map(str, mesh_shape))
+
+    if tag:
+        mesh_name = f"{mesh_name}__{tag}"
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate, meta, cfg, shape = build_cell(
+        arch_id, shape_name, mesh, smoke=smoke, microbatches=microbatches,
+        flags=flags, remat=remat)
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = _mem_analysis(compiled)
+    print(f"[{arch_id} x {shape_name} x {mesh_name}] memory_analysis:",
+          json.dumps(mem))
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    cost_small = {k: float(v) for k, v in cost.items()
+                  if isinstance(v, (int, float)) and
+                  k in ("flops", "bytes accessed", "transcendentals",
+                        "optimal_seconds")}
+    print(f"[{arch_id} x {shape_name} x {mesh_name}] cost_analysis:",
+          json.dumps(cost_small))
+
+    from repro.core import hlo_cost
+    hlo_text = compiled.as_text()
+    hc = hlo_cost.analyze(hlo_text)
+    if out_dir:
+        import gzip
+        os.makedirs(out_dir, exist_ok=True)
+        with gzip.open(os.path.join(
+                out_dir, f"{arch_id}__{shape_name}__{mesh_name}.hlo.gz"),
+                "wt") as zf:
+            zf.write(hlo_text)
+    mf = tfl.model_flops_for(cfg, shape.kind, shape.seq_len,
+                             shape.global_batch)
+    # memory term: flash-adjusted — attention score tensors are VMEM-
+    # resident on the TPU target (kernels/flash_attn); the raw CPU-fusion
+    # number is recorded alongside.
+    terms = tfl.RooflineTerms(
+        flops_per_chip=hc.flops,
+        hbm_bytes_per_chip=hc.hbm_bytes - hc.score_bytes,
+        collective_bytes_per_chip=hc.collective_bytes,
+        model_flops=mf, n_chips=meta["n_chips"],
+        label=f"{arch_id}|{shape_name}|{mesh_name}")
+
+    record = {
+        **meta,
+        "mesh": mesh_name,
+        "mesh_shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "xla_cost_analysis": cost_small,   # raw (scan bodies counted once)
+        "hlo_cost": {
+            "flops": hc.flops, "hbm_bytes": hc.hbm_bytes,
+            "score_bytes_vmem_resident": hc.score_bytes,
+            "collective_bytes": hc.collective_bytes,
+            "bytes_by_kind": hc.bytes_by_kind,
+            "count_by_kind": hc.count_by_kind,
+            "while_trips": hc.while_trips,
+            "top_collectives": hc.top_collectives[:8],
+            "top_dots": hc.top_dots[:8],
+            "top_hbm": hc.top_hbm[:8],
+        },
+        "roofline": terms.row(),
+        "ok": True,
+    }
+    print(f"[{arch_id} x {shape_name} x {mesh_name}] dominant="
+          f"{terms.dominant.value} bound={terms.bound:.4f}s "
+          f"useful_ratio={terms.useful_flops_ratio:.3f} "
+          f"(lower {t_lower:.1f}s compile {t_compile:.1f}s)")
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        path = os.path.join(out_dir,
+                            f"{arch_id}__{shape_name}__{mesh_name}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def _sweep(args):
+    """Run every cell x {pod, multipod} in parallel worker subprocesses."""
+    import subprocess
+    cells = [(a, s, mp) for a, s in registry.all_cells()
+             for mp in (False, True)]
+    procs: list[tuple[tuple, subprocess.Popen]] = []
+    results = {}
+
+    def launch(cell):
+        a, s, mp = cell
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", a, "--shape", s, "--out", args.out]
+        if mp:
+            cmd.append("--multi-pod")
+        return subprocess.Popen(cmd, stdout=subprocess.PIPE,
+                                stderr=subprocess.STDOUT, text=True)
+
+    pending = list(cells)
+    while pending or procs:
+        while pending and len(procs) < args.jobs:
+            c = pending.pop(0)
+            procs.append((c, launch(c)))
+            print(f"launched {c}", flush=True)
+        done = [(c, p) for c, p in procs if p.poll() is not None]
+        for c, p in done:
+            procs.remove((c, p))
+            out = p.stdout.read()
+            ok = p.returncode == 0
+            results[c] = ok
+            tag = "OK " if ok else "FAIL"
+            print(f"[{tag}] {c}")
+            if not ok:
+                print(out[-4000:])
+        time.sleep(2)
+    n_ok = sum(results.values())
+    print(f"\nsweep: {n_ok}/{len(results)} cells passed")
+    return 0 if n_ok == len(results) else 1
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=registry.ARCH_IDS)
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config + tiny shape (subprocess tests)")
+    ap.add_argument("--mesh-shape", type=str, default=None,
+                    help="e.g. 2,4 (data,model) or 2,2,4 (pod,data,model)")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--flag", action="append", default=[],
+                    help="PerfFlags field to enable (repeatable)")
+    ap.add_argument("--remat", default=None, choices=["none", "block"])
+    ap.add_argument("--tag", default="", help="artifact suffix")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("-j", "--jobs", type=int, default=4)
+    args = ap.parse_args(argv)
+
+    if args.all:
+        return _sweep(args)
+
+    mesh_shape = (tuple(int(x) for x in args.mesh_shape.split(","))
+                  if args.mesh_shape else None)
+    flags = None
+    if args.flag:
+        from repro.models.layers import PerfFlags
+        flags = PerfFlags(**{f: True for f in args.flag})
+    try:
+        run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                 out_dir=args.out, smoke=args.smoke, mesh_shape=mesh_shape,
+                 microbatches=args.microbatches, flags=flags,
+                 remat=args.remat, tag=args.tag)
+        return 0
+    except Exception:
+        traceback.print_exc()
+        return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

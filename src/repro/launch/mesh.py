@@ -1,0 +1,48 @@
+"""Production mesh builders.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so that
+importing this module never touches jax device state.  The dry-run launcher
+sets ``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import; smoke tests and benchmarks see the real single CPU device.
+
+Mesh axes:
+  single pod:  (16, 16)      ("data", "model")   = 256 chips (one v5e pod)
+  multi-pod:   (2, 16, 16)   ("pod", "data", "model") = 512 chips
+
+`model` carries TP/SP (and MoE expert-FF); `data` carries DP and MoE EP
+(expert parallelism stays on intra-pod ICI); `pod` is pure DP over the
+inter-pod links (DCI), which only see gradient reduce-scatters.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} are "
+            "visible — launch via repro.launch.dryrun (it sets "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax)")
+    return jax.make_mesh(shape, axes,
+                         devices=devices[:n])
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary mesh for tests / elastic restarts (e.g. (2,4) on 8 CPU
+    placeholder devices)."""
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(f"mesh {shape} needs {n} devices, "
+                           f"have {len(devices)}")
+    return jax.make_mesh(shape, axes,
+                         devices=devices[:n])

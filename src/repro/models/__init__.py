@@ -1,0 +1,6 @@
+from repro.models.common import (BlockCfg, ModelCfg, MoECfg, RGLRUCfg,
+                                 SSDCfg)
+from repro.models.layers import ShardCtx, single_device_mesh
+
+__all__ = ["BlockCfg", "ModelCfg", "MoECfg", "RGLRUCfg", "SSDCfg",
+           "ShardCtx", "single_device_mesh"]

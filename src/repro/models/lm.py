@@ -1,0 +1,393 @@
+"""Decoder-only LM assembling the mixers/MLPs in layers.py + moe.py.
+
+Layer execution uses ``lax.scan`` over the repeated block *pattern* with
+stacked parameters — the HLO is O(pattern) not O(depth), which keeps the
+512-device AOT compiles fast and is how the 61-layer / 1T-param kimi-k2
+lowers on one CPU host.  ``cfg.remat="block"`` wraps the scan body in
+``jax.checkpoint`` (activation recomputation per scan unit).
+
+Public entry points:
+  init_params / init_cache         (use jax.eval_shape(...) for the dry-run)
+  forward(params, batch, ...)      -> final hidden states
+  loss_fn(params, batch, ...)      -> (loss, metrics)  [vocab-sharded CE]
+  decode_step(params, tokens, cache, pos, ...) -> (logits, new_cache)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import moe as moe_lib
+from repro.models.common import BlockCfg, ModelCfg
+from repro.models.layers import (KeyGen, ShardCtx, attention, attention_decode,
+                                 attn_params, dt, mlp, mlp_params, rglru_mixer,
+                                 rglru_params, rms_norm, rope, softcap,
+                                 ssd_mixer, ssd_params, _init)
+
+AUX_SUM = ("moe_lb_loss", "moe_z_loss", "dropped_frac")
+AUX_MAX = ("max_expert_load",)
+
+
+# --------------------------------------------------------------------------
+# Parameter construction
+# --------------------------------------------------------------------------
+
+def _block_params(kg: KeyGen, blk: BlockCfg, cfg: ModelCfg, dtype) -> dict:
+    d = cfg.d_model
+    p: dict[str, Any] = {"norm1": jnp.zeros((d,), dtype)}
+    if blk.kind == "attn":
+        p["attn"] = attn_params(kg, cfg, dtype)
+    elif blk.kind == "ssd":
+        p["ssd"] = ssd_params(kg, cfg, blk.ssd, dtype)
+    elif blk.kind == "rglru":
+        p["rglru"] = rglru_params(kg, cfg, blk.rglru, dtype)
+    else:
+        raise ValueError(blk.kind)
+    if blk.moe is not None:
+        p["norm2"] = jnp.zeros((d,), dtype)
+        p["moe"] = moe_lib.moe_params(kg, cfg, blk.moe, dtype)
+    elif blk.d_ff:
+        p["norm2"] = jnp.zeros((d,), dtype)
+        p["mlp"] = mlp_params(kg, cfg.d_model, blk.d_ff, dtype)
+    if blk.post_norms:
+        p["norm1_post"] = jnp.zeros((d,), dtype)
+        p["norm2_post"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def init_params(cfg: ModelCfg, key) -> dict:
+    dtype = dt(cfg.param_dtype)
+    kg = KeyGen(key)
+    params: dict[str, Any] = {
+        "embed": _init(kg(), (cfg.vocab_size, cfg.d_model), cfg.d_model,
+                       dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = _init(kg(), (cfg.d_model, cfg.vocab_size),
+                                  cfg.d_model, dtype)
+    for i, blk in enumerate(cfg.prefix):
+        params[f"pre{i}"] = _block_params(kg, blk, cfg, dtype)
+    if cfg.n_repeats:
+        def one_repeat(k):
+            kg_r = KeyGen(k)
+            return {f"blk{j}": _block_params(kg_r, blk, cfg, dtype)
+                    for j, blk in enumerate(cfg.pattern)}
+        keys = jax.random.split(kg(), cfg.n_repeats)
+        params["pattern"] = jax.vmap(one_repeat)(keys)
+    for i, blk in enumerate(cfg.suffix):
+        params[f"suf{i}"] = _block_params(kg, blk, cfg, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Decode cache construction
+# --------------------------------------------------------------------------
+
+def _block_cache(blk: BlockCfg, cfg: ModelCfg, B: int, max_len: int, dtype):
+    if blk.kind == "attn":
+        W = min(blk.window, max_len) if blk.window else max_len
+        shape = (B, W, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    if blk.kind == "ssd":
+        s = blk.ssd
+        H = s.d_inner // s.head_dim
+        conv_ch = s.d_inner + 2 * s.n_groups * s.d_state
+        return {"conv": jnp.zeros((B, s.d_conv - 1, conv_ch), dtype),
+                "state": jnp.zeros((B, H, s.head_dim, s.d_state),
+                                   jnp.float32)}
+    if blk.kind == "rglru":
+        r = blk.rglru
+        return {"conv": jnp.zeros((B, r.d_conv - 1, r.d_rnn), dtype),
+                "h": jnp.zeros((B, r.d_rnn), jnp.float32)}
+    raise ValueError(blk.kind)
+
+
+def init_cache(cfg: ModelCfg, B: int, max_len: int) -> dict:
+    dtype = dt(cfg.param_dtype)
+    cache: dict[str, Any] = {}
+    for i, blk in enumerate(cfg.prefix):
+        cache[f"pre{i}"] = _block_cache(blk, cfg, B, max_len, dtype)
+    if cfg.n_repeats:
+        def one(_):
+            return {f"blk{j}": _block_cache(blk, cfg, B, max_len, dtype)
+                    for j, blk in enumerate(cfg.pattern)}
+        cache["pattern"] = jax.vmap(one)(jnp.arange(cfg.n_repeats))
+    for i, blk in enumerate(cfg.suffix):
+        cache[f"suf{i}"] = _block_cache(blk, cfg, B, max_len, dtype)
+    return cache
+
+
+def cache_spec(cfg: ModelCfg, ctx: ShardCtx):
+    """PartitionSpec tree for the decode cache: KV sequence over `model`
+    (flash-decoding), recurrent states channel-sharded over `model`."""
+    from jax.sharding import PartitionSpec as P
+    dp = ctx.dp_spec
+
+    def blk_spec(blk: BlockCfg):
+        if blk.kind == "attn":
+            return {"k": P(dp, ctx.tp, None, None),
+                    "v": P(dp, ctx.tp, None, None)}
+        if blk.kind == "ssd":
+            return {"conv": P(dp, None, ctx.tp),
+                    "state": P(dp, ctx.tp, None, None)}
+        return {"conv": P(dp, None, ctx.tp), "h": P(dp, ctx.tp)}
+
+    spec: dict[str, Any] = {}
+    for i, blk in enumerate(cfg.prefix):
+        spec[f"pre{i}"] = blk_spec(blk)
+    if cfg.n_repeats:
+        spec["pattern"] = {f"blk{j}": jax.tree.map(
+            lambda s: P(*((None,) + tuple(s))), blk_spec(blk),
+            is_leaf=lambda s: isinstance(s, P))
+            for j, blk in enumerate(cfg.pattern)}
+    for i, blk in enumerate(cfg.suffix):
+        spec[f"suf{i}"] = blk_spec(blk)
+    return spec
+
+
+# --------------------------------------------------------------------------
+# Block application
+# --------------------------------------------------------------------------
+
+def _zero_aux():
+    return {k: jnp.float32(0.0) for k in AUX_SUM + AUX_MAX}
+
+
+def _merge_aux(acc, new):
+    out = dict(acc)
+    for k in AUX_SUM:
+        out[k] = acc[k] + new.get(k, 0.0)
+    for k in AUX_MAX:
+        out[k] = jnp.maximum(acc[k], new.get(k, 0.0))
+    return out
+
+
+def apply_block(h, p, blk: BlockCfg, cfg: ModelCfg, ctx: ShardCtx, *,
+                positions=None, cache=None, pos=None, decode: bool = False,
+                collect_cache: bool = False):
+    """One residual block. Returns (h, new_cache, aux).
+
+    ``collect_cache`` (prefill): emit the decode cache from a full-sequence
+    pass (attention K/V, SSD conv+state, RG-LRU conv+h)."""
+    aux = {}
+    x = rms_norm(h, p["norm1"], cfg.norm_eps)
+    new_cache = cache
+    if blk.kind == "attn":
+        if decode:
+            y, ck, cv = attention_decode(x, p["attn"], blk, cfg, ctx,
+                                         cache_k=cache["k"],
+                                         cache_v=cache["v"], pos=pos)
+            new_cache = {"k": ck, "v": cv}
+        elif collect_cache:
+            y, (ck, cv) = attention(x, p["attn"], blk, cfg, ctx,
+                                    positions=positions, return_kv=True)
+            new_cache = {"k": ck, "v": cv}
+        else:
+            y = attention(x, p["attn"], blk, cfg, ctx, positions=positions)
+    elif blk.kind == "ssd":
+        y, conv, state = ssd_mixer(
+            x, p["ssd"], blk.ssd, cfg, ctx, decode=decode,
+            conv_state=None if cache is None else cache["conv"],
+            ssm_state=None if cache is None else cache["state"])
+        if cache is not None or collect_cache:
+            new_cache = {"conv": conv, "state": state}
+    elif blk.kind == "rglru":
+        y, conv, hst = rglru_mixer(
+            x, p["rglru"], blk.rglru, cfg, ctx, decode=decode,
+            conv_state=None if cache is None else cache["conv"],
+            h_state=None if cache is None else cache["h"])
+        if cache is not None or collect_cache:
+            new_cache = {"conv": conv, "h": hst}
+    if blk.post_norms:
+        y = rms_norm(y, p["norm1_post"], cfg.norm_eps)
+    h = h + y
+
+    if blk.moe is not None or blk.d_ff:
+        x = rms_norm(h, p["norm2"], cfg.norm_eps)
+        if blk.moe is not None:
+            y, aux = moe_lib.moe(x, p["moe"], blk.moe, cfg, ctx,
+                                 decode=decode)
+        else:
+            y = mlp(x, p["mlp"], cfg, ctx)
+        if blk.post_norms:
+            y = rms_norm(y, p["norm2_post"], cfg.norm_eps)
+        h = h + y
+    return h, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Forward / loss
+# --------------------------------------------------------------------------
+
+def embed_tokens(params, tokens, cfg: ModelCfg, ctx: ShardCtx,
+                 frontend_embeds=None):
+    h = jnp.take(params["embed"], tokens, axis=0).astype(dt(cfg.compute_dtype))
+    if cfg.emb_scale:
+        h = h * jnp.sqrt(jnp.float32(cfg.d_model)).astype(h.dtype)
+    if frontend_embeds is not None:
+        h = jnp.concatenate(
+            [frontend_embeds.astype(h.dtype), h], axis=1)
+    return ctx.cs_res(h)
+
+
+def forward(params, tokens, cfg: ModelCfg, ctx: ShardCtx,
+            frontend_embeds=None):
+    """Full-sequence forward -> (final hidden states, aux)."""
+    h = embed_tokens(params, tokens, cfg, ctx, frontend_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    aux = _zero_aux()
+    for i, blk in enumerate(cfg.prefix):
+        h, _, a = apply_block(h, params[f"pre{i}"], blk, cfg, ctx,
+                              positions=positions)
+        aux = _merge_aux(aux, a)
+
+    if cfg.n_repeats:
+        def body(carry, p_slice):
+            h, aux = carry
+            for j, blk in enumerate(cfg.pattern):
+                h, _, a = apply_block(h, p_slice[f"blk{j}"], blk, cfg, ctx,
+                                      positions=positions)
+                aux = _merge_aux(aux, a)
+            return (h, aux), None
+        if cfg.remat == "block":
+            body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux), _ = jax.lax.scan(body, (h, aux), params["pattern"])
+
+    for i, blk in enumerate(cfg.suffix):
+        h, _, a = apply_block(h, params[f"suf{i}"], blk, cfg, ctx,
+                              positions=positions)
+        aux = _merge_aux(aux, a)
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    return h, aux
+
+
+def logits_from_h(params, h, cfg: ModelCfg, ctx: ShardCtx):
+    w = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = jnp.einsum("bsd,dv->bsv", h, w,
+                        preferred_element_type=jnp.float32)
+    logits = ctx.cs(logits, ctx.dp_spec, None, ctx.tp)
+    return softcap(logits, cfg.final_softcap)
+
+
+def sharded_xent(logits, labels, weights=None):
+    """Cross entropy over a vocab-sharded logits tensor.  All reductions run
+    over the sharded vocab dim — GSPMD inserts the (tiny) all-reduces; the
+    full logits are never gathered."""
+    logits = logits.astype(jnp.float32)
+    V = logits.shape[-1]
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    onehot = (jnp.arange(V, dtype=labels.dtype)[None, None, :]
+              == labels[..., None])
+    ll = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+    nll = lse - ll
+    if weights is None:
+        weights = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(weights), 1.0)
+    loss = jnp.sum(nll * weights) / denom
+    z_loss = jnp.sum(jnp.square(lse) * weights) / denom
+    return loss, z_loss
+
+
+def loss_fn(params, batch, cfg: ModelCfg, ctx: ShardCtx, *,
+            z_weight: float = 1e-4):
+    """batch: {"tokens": (B,S'), "labels": (B,S), ["frontend_embeds"],
+    ["weights"]}.  Returns (total_loss, metrics)."""
+    h, aux = forward(params, batch["tokens"], cfg, ctx,
+                     frontend_embeds=batch.get("frontend_embeds"))
+    logits = logits_from_h(params, h, cfg, ctx)
+    loss, z_loss = sharded_xent(logits, batch["labels"],
+                                batch.get("weights"))
+    total = loss + z_weight * z_loss
+    moe_blocks = any(b.moe is not None for b in cfg.all_blocks())
+    if moe_blocks:
+        m = next(b.moe for b in cfg.all_blocks() if b.moe is not None)
+        total = (total + m.router_aux_weight * aux["moe_lb_loss"]
+                 + m.router_z_weight * aux["moe_z_loss"])
+    metrics = {"loss": loss, "z_loss": z_loss, **aux}
+    return total, metrics
+
+
+def prefill(params, tokens, cfg: ModelCfg, ctx: ShardCtx,
+            frontend_embeds=None):
+    """Full-context prefill: returns (last-position logits (B,V), cache).
+
+    The cache layout matches init_cache with max_len == S (window blocks
+    keep the last `window` positions; the serving engine copies it into its
+    preallocated ring/linear buffers)."""
+    h = embed_tokens(params, tokens, cfg, ctx, frontend_embeds)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    cache: dict[str, Any] = {}
+    for i, blk in enumerate(cfg.prefix):
+        h, c, _ = apply_block(h, params[f"pre{i}"], blk, cfg, ctx,
+                              positions=positions, collect_cache=True)
+        cache[f"pre{i}"] = c
+
+    if cfg.n_repeats:
+        def body(h, p_slice):
+            new_c = {}
+            for j, blk in enumerate(cfg.pattern):
+                h, c, _ = apply_block(h, p_slice[f"blk{j}"], blk, cfg, ctx,
+                                      positions=positions,
+                                      collect_cache=True)
+                new_c[f"blk{j}"] = c
+            return h, new_c
+        h, pat_cache = jax.lax.scan(body, h, params["pattern"])
+        cache["pattern"] = pat_cache
+
+    for i, blk in enumerate(cfg.suffix):
+        h, c, _ = apply_block(h, params[f"suf{i}"], blk, cfg, ctx,
+                              positions=positions, collect_cache=True)
+        cache[f"suf{i}"] = c
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_h(params, h[:, -1:], cfg, ctx)
+    return logits[:, 0], cache
+
+
+# --------------------------------------------------------------------------
+# Decode
+# --------------------------------------------------------------------------
+
+def decode_step(params, tokens, cache, pos, cfg: ModelCfg, ctx: ShardCtx):
+    """One-token decode. tokens: (B, 1); pos: scalar int32 (current index;
+    cache holds positions < pos... pos).  Returns (logits (B, V), cache)."""
+    h = embed_tokens(params, tokens, cfg, ctx)
+    aux = _zero_aux()
+    new_cache: dict[str, Any] = {}
+    for i, blk in enumerate(cfg.prefix):
+        h, c, a = apply_block(h, params[f"pre{i}"], blk, cfg, ctx,
+                              cache=cache[f"pre{i}"], pos=pos, decode=True)
+        new_cache[f"pre{i}"] = c
+        aux = _merge_aux(aux, a)
+
+    if cfg.n_repeats:
+        def body(carry, xs):
+            h, aux = carry
+            p_slice, c_slice = xs
+            new_c = {}
+            for j, blk in enumerate(cfg.pattern):
+                h, c, a = apply_block(h, p_slice[f"blk{j}"], blk, cfg, ctx,
+                                      cache=c_slice[f"blk{j}"], pos=pos,
+                                      decode=True)
+                new_c[f"blk{j}"] = c
+                aux = _merge_aux(aux, a)
+            return (h, aux), new_c
+        (h, aux), pat_cache = jax.lax.scan(
+            body, (h, aux), (params["pattern"], cache["pattern"]))
+        new_cache["pattern"] = pat_cache
+
+    for i, blk in enumerate(cfg.suffix):
+        h, c, a = apply_block(h, params[f"suf{i}"], blk, cfg, ctx,
+                              cache=cache[f"suf{i}"], pos=pos, decode=True)
+        new_cache[f"suf{i}"] = c
+        aux = _merge_aux(aux, a)
+
+    h = rms_norm(h, params["final_norm"], cfg.norm_eps)
+    logits = logits_from_h(params, h, cfg, ctx)
+    return logits[:, 0], new_cache

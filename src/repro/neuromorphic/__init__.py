@@ -1,0 +1,26 @@
+"""JAX-based neuromorphic accelerator simulator.
+
+Implements the macro-architecture of paper Fig. 1 — neurocores with co-located
+synaptic memory / neuron state / compute, connected by a 2-D mesh NoC, running
+barrier-synchronized timesteps — with per-platform cost profiles standing in
+for the three real accelerators characterized in the paper (AKD1000, Speck,
+Loihi 2).  Functional execution and event counters are exact; times/energies
+come from the cost model (relative units, matching the paper's normalized
+reporting).
+"""
+
+from repro.neuromorphic.platform import (ChipProfile, akd1000_like, loihi2_like,
+                                         speck_like)
+from repro.neuromorphic.network import (SimLayer, SimNetwork, fc_network,
+                                        make_inputs, programmed_fc_network)
+from repro.neuromorphic.partition import Partition, minimal_partition
+from repro.neuromorphic.noc import Mapping, ordered_mapping, strided_mapping
+from repro.neuromorphic.timestep import SimReport, simulate
+
+__all__ = [
+    "ChipProfile", "akd1000_like", "loihi2_like", "speck_like",
+    "SimLayer", "SimNetwork", "fc_network", "make_inputs", "programmed_fc_network",
+    "Partition", "minimal_partition",
+    "Mapping", "ordered_mapping", "strided_mapping",
+    "SimReport", "simulate",
+]

@@ -1,0 +1,318 @@
+"""Network abstraction executed by the neuromorphic simulator.
+
+A :class:`SimNetwork` is a feed-forward stack of :class:`SimLayer` s.  Each
+layer owns its synaptic weights, neuron model (ReLU / IF-spiking / sigma-delta
+ReLU / SSM state), optional message gate (used to *program* exact activation
+sparsity, as the paper does in §V-A by "explicitly toggling neuron activation
+messaging on and off"), and weight format (dense/sparse, Fig. 4).
+
+``step`` executes one timestep functionally (exact values) and returns exact
+event-counter maps per neuron; the cost model in :mod:`repro.neuromorphic.
+timestep` turns those into per-core times and energies.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class CounterMaps:
+    """Exact per-timestep event counts for one layer.
+
+    Per-neuron maps are flattened in *partition order* (channel-major for
+    conv layers) so contiguous core ranges are meaningful.
+    """
+
+    msgs_in: float                 # input messages arriving this step
+    macs: np.ndarray               # nnz multiply-accumulates per neuron
+    fetches_dense: np.ndarray      # dense-format weight fetches per neuron
+    msgs_out: np.ndarray           # 0/1 message emitted per neuron
+    acts_evented: np.ndarray       # 0/1 neuron received >= 1 synop
+
+
+@dataclasses.dataclass
+class SimLayer:
+    """One layer mapped onto one-or-more neurocores."""
+
+    name: str
+    kind: str                       # 'fc' | 'conv'
+    weights: np.ndarray             # fc: (fanin, nout); conv: (kh, kw, cin, cout)
+    bias: np.ndarray | None = None
+    neuron_model: str = "relu"      # 'relu' | 'if' | 'sd_relu' | 'ssm'
+    weight_format: str | None = None   # None -> platform default
+    msg_gate: np.ndarray | None = None # 0/1 per neuron; programs act sparsity
+    threshold: float = 0.0          # IF spike / sigma-delta threshold
+    decay: float = 0.9              # SSM state decay (diag A)
+    stride: int = 1                 # conv only
+    in_hw: tuple[int, int] | None = None   # conv only: input spatial dims
+    force_active: bool = False      # characterization mode: all neurons emit
+    sends_deltas: bool = False      # sigma-delta layers emit deltas
+
+    # ------------------------------------------------------------------ sizes
+    @property
+    def n_neurons(self) -> int:
+        if self.kind == "fc":
+            return int(self.weights.shape[1])
+        kh, kw, cin, cout = self.weights.shape
+        oh, ow = self.out_hw
+        return int(cout * oh * ow)
+
+    @property
+    def out_hw(self) -> tuple[int, int]:
+        assert self.kind == "conv" and self.in_hw is not None
+        h, w = self.in_hw
+        return (h // self.stride, w // self.stride)   # SAME padding
+
+    @property
+    def n_weights(self) -> int:
+        return int(np.prod(self.weights.shape))
+
+    @property
+    def fanin(self) -> int:
+        if self.kind == "fc":
+            return int(self.weights.shape[0])
+        kh, kw, cin, _ = self.weights.shape
+        return int(kh * kw * cin)
+
+    def weights_per_core(self, n_cores: int) -> int:
+        """Synaptic memory words needed per core under an n_cores split
+        (fc: neuron ranges; conv: output-channel ranges)."""
+        if self.kind == "fc":
+            per = -(-self.weights.shape[1] // n_cores)
+            return int(self.weights.shape[0] * per)
+        kh, kw, cin, cout = self.weights.shape
+        per = -(-cout // n_cores)
+        return int(kh * kw * cin * per)
+
+    def init_state(self) -> dict[str, np.ndarray]:
+        n = self.n_neurons
+        st: dict[str, Any] = {}
+        if self.neuron_model == "if":
+            st["v"] = np.zeros(n, np.float32)
+        elif self.neuron_model == "sd_relu":
+            st["y_sent"] = np.zeros(n, np.float32)
+        elif self.neuron_model == "ssm":
+            st["x"] = np.zeros(n, np.float32)
+        if self.sends_deltas or self.neuron_model == "sd_relu":
+            pass
+        return st
+
+    # ------------------------------------------------------------------ step
+    def step(self, x_in: np.ndarray, state: dict[str, np.ndarray],
+             in_acc: np.ndarray | None) -> tuple[np.ndarray, dict, CounterMaps,
+                                                 np.ndarray | None]:
+        """One timestep: consume input messages ``x_in``, produce output
+        messages, update neuron state, and count events exactly.
+
+        ``in_acc`` reconstructs the upstream activation when the upstream
+        layer sends deltas (sigma-delta); otherwise it is None and the raw
+        messages are the activation.
+        """
+        x_in = np.asarray(x_in, np.float32)
+        if in_acc is not None:
+            in_acc = in_acc + x_in          # delta reconstruction
+            x_eff = in_acc
+        else:
+            x_eff = x_in
+
+        act_mask = (x_in != 0).astype(np.float32)   # events on the wire
+        msgs_in = float(act_mask.sum())
+
+        if self.kind == "fc":
+            pre = x_eff @ self.weights
+            w_mask = (self.weights != 0).astype(np.float32)
+            macs = act_mask @ w_mask
+            fetches_dense = np.full(self.n_neurons, msgs_in, np.float32)
+        else:
+            pre, macs, fetches_dense = self._conv_forward(x_eff, act_mask)
+
+        if self.bias is not None:
+            pre = pre + self.bias
+
+        y_msgs, state = self._neuron(pre, state)
+        if self.msg_gate is not None:
+            y_msgs = y_msgs * self.msg_gate
+        msgs_out = (y_msgs != 0).astype(np.float32)
+
+        counters = CounterMaps(
+            msgs_in=msgs_in,
+            macs=np.asarray(macs, np.float32).reshape(-1),
+            fetches_dense=np.asarray(fetches_dense, np.float32).reshape(-1),
+            msgs_out=msgs_out.reshape(-1),
+            acts_evented=(np.asarray(macs).reshape(-1) > 0).astype(np.float32),
+        )
+        return y_msgs, state, counters, in_acc
+
+    # ------------------------------------------------------------ neuron fns
+    def _neuron(self, pre: np.ndarray, state: dict) -> tuple[np.ndarray, dict]:
+        if self.neuron_model == "relu":
+            y = np.maximum(pre, 0.0)
+            if self.force_active:
+                y = np.abs(pre) + 1.0
+            return y, state
+        if self.neuron_model == "if":
+            v = state["v"] + pre
+            thr = max(self.threshold, 1e-6)
+            spikes = (v >= thr).astype(np.float32)
+            state = dict(state, v=v - thr * spikes)
+            return spikes, state
+        if self.neuron_model == "sd_relu":
+            y = np.maximum(pre, 0.0)
+            delta = y - state["y_sent"]
+            thr = max(self.threshold, 1e-9)
+            q = np.where(np.abs(delta) >= thr,
+                         np.round(delta / thr) * thr, 0.0).astype(np.float32)
+            state = dict(state, y_sent=state["y_sent"] + q)
+            return q, state
+        if self.neuron_model == "ssm":
+            x = self.decay * state["x"] + pre
+            state = dict(state, x=x)
+            y = np.abs(x) + 1.0 if self.force_active else x
+            return y.astype(np.float32), state
+        raise ValueError(f"unknown neuron model {self.neuron_model}")
+
+    # ------------------------------------------------------------- conv math
+    def _conv_forward(self, x_eff: np.ndarray, act_mask: np.ndarray):
+        """SAME-padded strided conv + exact MAC / dense-fetch counting.
+
+        Counter maps are returned channel-major ((cout, oh, ow) flattened) so
+        output-channel core ranges are contiguous.
+        """
+        h, w = self.in_hw
+        cin = self.weights.shape[2]
+        # flat boundaries are channel-major ((c, h, w)) on BOTH sides so
+        # conv->conv stacks keep consistent receptive fields
+        to_hwc = lambda a: np.transpose(a.reshape(cin, h, w), (1, 2, 0))
+        x4 = jnp.asarray(to_hwc(x_eff)[None])
+        m4 = jnp.asarray(to_hwc(act_mask)[None])
+        wj = jnp.asarray(self.weights)
+        wmask = (wj != 0).astype(jnp.float32)
+        wones = jnp.ones_like(wj)
+
+        def conv(lhs, rhs):
+            return jax.lax.conv_general_dilated(
+                lhs, rhs, window_strides=(self.stride, self.stride),
+                padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+        pre = np.asarray(conv(x4, wj))[0]                  # (oh, ow, cout)
+        macs = np.asarray(conv(m4, wmask))[0]
+        fetches = np.asarray(conv(m4, wones))[0]
+        # channel-major flatten for contiguous channel partitions
+        to_flat = lambda a: np.transpose(a, (2, 0, 1)).reshape(-1)
+        pre_flat = to_flat(pre)
+        return pre_flat, to_flat(macs), to_flat(fetches)
+
+
+@dataclasses.dataclass
+class SimNetwork:
+    """Feed-forward stack of SimLayers with per-layer state threading."""
+
+    layers: list[SimLayer]
+    in_size: int
+
+    def init_states(self) -> list[dict]:
+        return [l.init_state() for l in self.layers]
+
+    def init_accs(self) -> list[np.ndarray | None]:
+        """Delta-reconstruction accumulators at each layer boundary: layer i
+        needs one iff layer i-1 (or the network input) sends deltas."""
+        accs: list[np.ndarray | None] = []
+        prev_sends_deltas = False
+        prev_n = self.in_size
+        for l in self.layers:
+            accs.append(np.zeros(prev_n, np.float32) if prev_sends_deltas else None)
+            prev_sends_deltas = l.sends_deltas or l.neuron_model == "sd_relu"
+            prev_n = l.n_neurons
+        return accs
+
+    def step(self, x: np.ndarray, states: list[dict],
+             accs: list[np.ndarray | None]) -> tuple[np.ndarray, list, list,
+                                                     list[CounterMaps]]:
+        counters: list[CounterMaps] = []
+        new_states, new_accs = [], []
+        cur = np.asarray(x, np.float32)
+        for layer, st, acc in zip(self.layers, states, accs):
+            cur, st, cnt, acc = layer.step(cur, st, acc)
+            counters.append(cnt)
+            new_states.append(st)
+            new_accs.append(acc)
+        return cur, new_states, new_accs, counters
+
+    def run(self, xs: np.ndarray) -> tuple[np.ndarray, list[list[CounterMaps]]]:
+        """Run a (T, in_size)-shaped input sequence; return (T, out) outputs
+        and per-timestep per-layer counters."""
+        states, accs = self.init_states(), self.init_accs()
+        outs, all_counters = [], []
+        for t in range(xs.shape[0]):
+            y, states, accs, counters = self.step(xs[t], states, accs)
+            outs.append(np.asarray(y).reshape(-1))
+            all_counters.append(counters)
+        return np.stack(outs), all_counters
+
+
+# ====================================================================== builders
+
+def _exact_density_mask(shape: tuple[int, ...], density: float,
+                        rng: np.random.Generator) -> np.ndarray:
+    """0/1 mask with an exact (rounded) fraction of ones, uniformly placed."""
+    n = int(np.prod(shape))
+    k = int(round(density * n))
+    flat = np.zeros(n, np.float32)
+    if k > 0:
+        flat[rng.choice(n, size=k, replace=False)] = 1.0
+    return flat.reshape(shape)
+
+
+def fc_network(sizes: list[int], *, weight_density: float | list[float] = 1.0,
+               neuron_model: str = "relu", seed: int = 0,
+               weight_format: str | None = None) -> SimNetwork:
+    """Random fully-connected network with exact per-layer weight density."""
+    rng = np.random.default_rng(seed)
+    wd = ([weight_density] * (len(sizes) - 1)
+          if np.isscalar(weight_density) else list(weight_density))
+    layers = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 1.0 / np.sqrt(sizes[i]),
+                       (sizes[i], sizes[i + 1])).astype(np.float32)
+        w *= _exact_density_mask(w.shape, wd[i], rng)
+        layers.append(SimLayer(name=f"fc{i}", kind="fc", weights=w,
+                               neuron_model=neuron_model,
+                               weight_format=weight_format))
+    return SimNetwork(layers=layers, in_size=sizes[0])
+
+
+def programmed_fc_network(sizes: list[int], *, weight_densities: list[float],
+                          act_densities: list[float], seed: int = 0,
+                          weight_format: str | None = None,
+                          neuron_model: str = "relu") -> SimNetwork:
+    """Characterization-mode network (§V-A): weight density exact per layer,
+    activation (message) density exactly *programmed* via per-neuron message
+    gates with all neurons forced active — the simulator analog of the
+    paper's "explicitly toggling neuron activation messaging on and off"."""
+    assert len(weight_densities) == len(sizes) - 1
+    assert len(act_densities) == len(sizes) - 1
+    rng = np.random.default_rng(seed)
+    layers = []
+    for i in range(len(sizes) - 1):
+        w = rng.normal(0, 1.0 / np.sqrt(sizes[i]),
+                       (sizes[i], sizes[i + 1])).astype(np.float32)
+        w *= _exact_density_mask(w.shape, weight_densities[i], rng)
+        gate = _exact_density_mask((sizes[i + 1],), act_densities[i], rng)
+        layers.append(SimLayer(name=f"fc{i}", kind="fc", weights=w,
+                               neuron_model=neuron_model, msg_gate=gate,
+                               force_active=True, weight_format=weight_format))
+    return SimNetwork(layers=layers, in_size=sizes[0])
+
+
+def make_inputs(n: int, density: float, steps: int, seed: int = 0) -> np.ndarray:
+    """(steps, n) inputs with exact per-step message density."""
+    rng = np.random.default_rng(seed)
+    return np.stack([np.abs(rng.normal(1.0, 0.2, n)).astype(np.float32)
+                     * _exact_density_mask((n,), density, rng)
+                     for _ in range(steps)])

@@ -1,0 +1,162 @@
+"""Network-on-chip model: router-shared core placement + XY-routed congestion.
+
+Mirrors the paper's §V-F traffic mechanism: several neurocores share each NoC
+router tile (as on Loihi), so an *ordered* mapping that places a layer's
+(equally busy) cores on consecutive slots concentrates its injection load on
+a few routers — "the highest output neurocores ... are physically close to
+one another and create congestion on their shared NoC routers".  A *strided*
+mapping spreads same-layer cores across router paths (Fig. 8).
+
+Messages from every core of layer l are duplicated (unicast per destination)
+to every core of layer l+1 (broadcast, §III-C); the last layer's outputs
+route to the chip I/O port at router 0.  Router load counts injections,
+transits, and deliveries; dimension-ordered (X-then-Y) routing on the router
+grid.  Per-pair router path incidence is precomputed per profile so a step's
+congestion is two small matmuls.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.neuromorphic.partition import Partition
+from repro.neuromorphic.platform import ChipProfile
+
+
+@dataclasses.dataclass(frozen=True)
+class Mapping:
+    """logical core index -> physical core slot."""
+
+    phys: tuple[int, ...]
+    name: str = "custom"
+
+    def __post_init__(self):
+        if len(set(self.phys)) != len(self.phys):
+            raise ValueError("mapping assigns two logical cores to one slot")
+
+
+def ordered_mapping(part: Partition, profile: ChipProfile) -> Mapping:
+    """Sequential placement — the congestion-prone Loihi-1 heuristic [27]."""
+    n = part.total_cores
+    if n > profile.n_cores:
+        raise ValueError("partition exceeds physical cores")
+    return Mapping(tuple(range(n)), name="ordered")
+
+
+def strided_mapping(part: Partition, profile: ChipProfile) -> Mapping:
+    """Strided placement: consecutive logical cores land on different
+    routers, so same-layer cores use disjoint router paths."""
+    n = part.total_cores
+    if n > profile.n_cores:
+        raise ValueError("partition exceeds physical cores")
+    n_routers = n_router_tiles(profile)
+    cpr = cores_per_router(profile)
+    order = [r + n_routers * s for s in range(cpr) for r in range(n_routers)]
+    return Mapping(tuple(int(_router_slot_to_core(o, profile)) for o in order[:n]),
+                   name="strided")
+
+
+def cores_per_router(profile: ChipProfile) -> int:
+    rows, cols = profile.grid
+    return max(1, profile.n_cores // (rows * cols))
+
+
+def n_router_tiles(profile: ChipProfile) -> int:
+    rows, cols = profile.grid
+    return rows * cols
+
+
+def core_router(core: int, profile: ChipProfile) -> int:
+    return core // cores_per_router(profile)
+
+
+def _router_slot_to_core(order_idx: int, profile: ChipProfile) -> int:
+    """order_idx encodes (slot within router, router) -> physical core id."""
+    n_routers = n_router_tiles(profile)
+    slot, router = order_idx // n_routers, order_idx % n_routers
+    return router * cores_per_router(profile) + slot
+
+
+@functools.lru_cache(maxsize=16)
+def _path_incidence(grid: tuple[int, int]) -> np.ndarray:
+    """(R*R, R) matrix: entry[(src*R+dst), node] = 1 if the X-then-Y route
+    from src to dst touches router ``node`` (inject/transit/deliver)."""
+    rows, cols = grid
+    R = rows * cols
+    inc = np.zeros((R * R, R), np.float32)
+    for s in range(R):
+        r1, c1 = divmod(s, cols)
+        for d in range(R):
+            r2, c2 = divmod(d, cols)
+            nodes = [s]
+            step = 1 if c2 >= c1 else -1
+            for c in range(c1 + step, c2 + step, step) if c1 != c2 else []:
+                nodes.append(r1 * cols + c)
+            step = 1 if r2 >= r1 else -1
+            for r in range(r1 + step, r2 + step, step) if r1 != r2 else []:
+                nodes.append(r * cols + c2)
+            inc[s * R + d, nodes] = 1.0
+    return inc
+
+
+@functools.lru_cache(maxsize=16)
+def _pair_hops(grid: tuple[int, int]) -> np.ndarray:
+    """(R*R,) Manhattan hop counts between router pairs."""
+    rows, cols = grid
+    R = rows * cols
+    r = np.arange(R)
+    rr, cc = r // cols, r % cols
+    return (np.abs(rr[:, None] - rr[None, :])
+            + np.abs(cc[:, None] - cc[None, :])).astype(np.float32).reshape(-1)
+
+
+@dataclasses.dataclass
+class NocTraffic:
+    """One timestep's routed traffic."""
+
+    router_loads: np.ndarray      # packets touching each router
+    total_hops: float             # link traversals (for hop energy)
+    inject_per_core: np.ndarray   # packets injected by each logical core
+
+    @property
+    def max_router_load(self) -> float:
+        return float(self.router_loads.max(initial=0.0))
+
+
+def route_step(part: Partition, mapping: Mapping,
+               msgs_out_per_core: list[np.ndarray],
+               profile: ChipProfile) -> NocTraffic:
+    """Route one timestep's messages.  ``msgs_out_per_core[l]`` holds message
+    counts per core of layer l; each message is unicast-duplicated to every
+    core of layer l+1; the final layer exits at router 0."""
+    grid = profile.grid
+    R = n_router_tiles(profile)
+    flow = np.zeros((R, R), np.float64)          # router -> router packets
+    n_logical = part.total_cores
+    inject = np.zeros(n_logical, np.float64)
+    offsets = np.concatenate([[0], np.cumsum(part.cores)]).astype(int)
+    routers = np.asarray([core_router(p, profile) for p in mapping.phys])
+
+    n_layers = len(part.cores)
+    for l in range(n_layers):
+        src_idx = np.arange(offsets[l], offsets[l + 1])
+        msgs = np.asarray(msgs_out_per_core[l], np.float64)
+        if l + 1 < n_layers:
+            dst_routers = routers[offsets[l + 1]:offsets[l + 2]]
+        else:
+            dst_routers = np.asarray([0])        # chip I/O port
+        inject[src_idx] += msgs * len(dst_routers)
+        src_routers = routers[src_idx]
+        np.add.at(flow, (src_routers[:, None].repeat(len(dst_routers), 1),
+                         np.broadcast_to(dst_routers, (len(src_idx),
+                                                       len(dst_routers)))),
+                  msgs[:, None])
+
+    inc = _path_incidence(grid)
+    loads = flow.reshape(-1) @ inc
+    hops = float(flow.reshape(-1) @ _pair_hops(grid))
+    return NocTraffic(router_loads=np.asarray(loads), total_hops=hops,
+                      inject_per_core=inject)

@@ -1,0 +1,232 @@
+"""Barrier-synchronized timestep cost model + full simulation entry point.
+
+Implements the paper's execution model (§II-A, Fig. 1 bottom): within a
+timestep every neurocore (1) accumulates synops for each input message,
+(2) computes activations, (3) emits activation messages, (4) barrier-syncs.
+Per-core synop and activation stages are pipelined, so a core's time is the
+max of its memory stage and compute stage (the floorline's straight-boundary
+assumption, §VI-A); the timestep is set by the slowest core or by NoC
+congestion, plus barrier overhead.
+
+Asynchronous platforms (Speck) have no barrier: a sample's latency is the
+pipeline sum over layers of event-driven core work, and idle cores consume
+no active power.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.metrics import LoadStats, WorkloadMetrics
+from repro.neuromorphic.network import CounterMaps, SimNetwork
+from repro.neuromorphic.noc import Mapping, NocTraffic, ordered_mapping, route_step
+from repro.neuromorphic.partition import Partition, minimal_partition
+from repro.neuromorphic.platform import ChipProfile
+
+
+@dataclasses.dataclass
+class CoreCounters:
+    """Per-core event counts for one layer at one timestep."""
+
+    msgs_in: np.ndarray        # input messages seen by each core (broadcast)
+    synops: np.ndarray         # format-effective weight fetches per core
+    macs: np.ndarray           # nnz multiply-accumulates per core
+    acts: np.ndarray           # neuron updates per core
+    msgs_out: np.ndarray       # messages emitted per core
+    neurons: np.ndarray        # neurons mapped per core
+    sparse_format: bool
+
+
+def _segment_sums(per_neuron: np.ndarray, bounds: np.ndarray) -> np.ndarray:
+    csum = np.concatenate([[0.0], np.cumsum(per_neuron, dtype=np.float64)])
+    return csum[bounds[1:]] - csum[bounds[:-1]]
+
+
+def aggregate_layer(counters: CounterMaps, layer_idx: int, part: Partition,
+                    net: SimNetwork, profile: ChipProfile) -> CoreCounters:
+    layer = net.layers[layer_idx]
+    n = layer.n_neurons
+    bounds = part.boundaries(layer_idx, n)
+    fmt = layer.weight_format or (
+        profile.default_format_conv if layer.kind == "conv"
+        else profile.default_format_fc)
+    sparse = fmt == "sparse"
+    macs = _segment_sums(counters.macs, bounds)
+    fetches_dense = _segment_sums(counters.fetches_dense, bounds)
+    synops = macs if sparse else fetches_dense
+    acts_map = (counters.acts_evented if not profile.synchronous
+                else np.ones_like(counters.macs))
+    return CoreCounters(
+        msgs_in=np.full(part.cores[layer_idx], counters.msgs_in, np.float64),
+        synops=np.asarray(synops, np.float64),
+        macs=np.asarray(macs, np.float64),
+        acts=_segment_sums(acts_map, bounds),
+        msgs_out=_segment_sums(counters.msgs_out, bounds),
+        neurons=np.diff(bounds).astype(np.float64),
+        sparse_format=sparse,
+    )
+
+
+def core_times(cc: CoreCounters, neuron_model: str,
+               profile: ChipProfile) -> tuple[np.ndarray, np.ndarray]:
+    """(memory-stage, compute-stage) time per core of one layer."""
+    p = profile
+    if cc.sparse_format:
+        mem = (cc.msgs_in * (p.c_msg_recv + p.c_decode_msg)
+               + cc.synops * (p.c_fetch + p.c_decode_word + p.c_mac))
+    else:
+        mem = cc.msgs_in * p.c_msg_recv + cc.synops * (p.c_fetch + p.c_mac)
+    act = cc.acts * p.neuron_cost(neuron_model)
+    return mem, act
+
+
+@dataclasses.dataclass
+class SimReport:
+    """Simulation output: performance + M0 metrics + raw per-core arrays."""
+
+    time_per_step: float            # mean over steps (timestep duration /
+                                    # sample latency for async chips)
+    energy_per_step: float
+    times: np.ndarray               # per-step
+    energies: np.ndarray
+    metrics: WorkloadMetrics        # M0 (means over steps)
+    max_synops: float               # mean over steps of max-per-core synops
+    max_acts: float
+    max_link_load: float
+    n_cores_active: int
+    outputs: np.ndarray             # functional network outputs (T, out)
+    per_core_synops: np.ndarray     # (n_logical_cores,) mean over steps
+    per_core_acts: np.ndarray
+    per_core_msgs_out: np.ndarray
+    bottleneck_stage: str           # which term set the mean step time
+
+    def summary(self) -> str:
+        return (f"time/step={self.time_per_step:.1f} "
+                f"energy/step={self.energy_per_step:.1f} "
+                f"max_synops={self.max_synops:.0f} "
+                f"cores={self.n_cores_active} "
+                f"bottleneck={self.bottleneck_stage}")
+
+
+def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
+             part: Partition | None = None,
+             mapping: Mapping | None = None) -> SimReport:
+    """Run the network on the simulated chip and price every timestep."""
+    part = part or minimal_partition(net, profile)
+    mapping = mapping or ordered_mapping(part, profile)
+    outputs, all_counters = net.run(xs)
+
+    T = xs.shape[0]
+    n_layers = len(net.layers)
+    n_logical = part.total_cores
+    times = np.zeros(T)
+    energies = np.zeros(T)
+    sum_core_synops = np.zeros(n_logical)
+    sum_core_acts = np.zeros(n_logical)
+    sum_core_msgs = np.zeros(n_logical)
+    max_synops_steps = np.zeros(T)
+    max_acts_steps = np.zeros(T)
+    max_link_steps = np.zeros(T)
+    stage_votes = {"memory": 0, "compute": 0, "traffic": 0, "barrier": 0}
+    total_msgs = 0.0
+    total_neuron_steps = 0.0
+
+    offsets = np.concatenate([[0], np.cumsum(part.cores)]).astype(int)
+
+    for t in range(T):
+        layer_cc = [aggregate_layer(all_counters[t][l], l, part, net, profile)
+                    for l in range(n_layers)]
+        mem_all, act_all = [], []
+        msgs_out_per_core = []
+        e_events = 0.0
+        for l, cc in enumerate(layer_cc):
+            mem, act = core_times(cc, net.layers[l].neuron_model, profile)
+            mem_all.append(mem)
+            act_all.append(act)
+            msgs_out_per_core.append(cc.msgs_out)
+            sl = slice(offsets[l], offsets[l + 1])
+            sum_core_synops[sl] += cc.synops
+            sum_core_acts[sl] += cc.acts
+            sum_core_msgs[sl] += cc.msgs_out
+            # event energies: fetch every (format-effective) synop; MAC energy
+            # only on nonzero weights (dense formats skip the multiply ->
+            # the small Fig-2 energy benefit of CNN weight sparsity)
+            e_events += (profile.e_fetch * cc.synops.sum()
+                         + profile.e_mac * cc.macs.sum()
+                         + (profile.e_decode * cc.synops.sum()
+                            if cc.sparse_format else 0.0)
+                         + profile.e_act * cc.acts.sum()
+                         * (profile.neuron_cost(net.layers[l].neuron_model)
+                            / profile.c_act))
+            total_msgs += cc.msgs_out.sum()
+            total_neuron_steps += cc.neurons.sum()
+
+        traffic = route_step(part, mapping, msgs_out_per_core, profile)
+        mem_cat = np.concatenate(mem_all)
+        act_cat = np.concatenate(act_all)
+        core_time = np.maximum(mem_cat, act_cat) + profile.t_core_fixed
+        # Congestion: the busiest router serializes every packet touching it;
+        # cores also serialize their own (duplicated) injections.
+        traffic_time = (profile.c_route * traffic.max_router_load
+                        + profile.c_inject
+                        * float(traffic.inject_per_core.max(initial=0.0)))
+
+        if profile.synchronous:
+            t_compute = float(core_time.max(initial=0.0))
+            t_step = max(t_compute, traffic_time) + profile.t_barrier
+            which = ("traffic" if traffic_time > t_compute else
+                     ("memory" if mem_cat.max(initial=0.0)
+                      >= act_cat.max(initial=0.0) else "compute"))
+        else:
+            # async pipeline: sample latency = sum over layers of the layer's
+            # slowest event-driven core + NoC transit
+            per_layer = [float(np.maximum(m, a).max(initial=0.0))
+                         for m, a in zip(mem_all, act_all)]
+            t_step = sum(per_layer) + profile.c_msg_hop * traffic.total_hops / max(
+                part.total_cores, 1)
+            which = "memory"
+
+        n_active = int(np.sum(np.concatenate(
+            [cc.synops + cc.msgs_out for cc in layer_cc]) > 0)) or n_logical
+        e_hops = profile.e_msg_hop * traffic.total_hops
+        energies[t] = (t_step * (profile.p_idle + profile.p_core * n_active)
+                       + e_events + e_hops)
+        times[t] = t_step
+        stage_votes[which] += 1
+        syn_step = np.concatenate([cc.synops for cc in layer_cc])
+        acts_step = np.concatenate([cc.acts for cc in layer_cc])
+        max_synops_steps[t] = syn_step.max(initial=0.0)
+        max_acts_steps[t] = acts_step.max(initial=0.0)
+        max_link_steps[t] = traffic.max_router_load
+
+    mean_synops = sum_core_synops / T
+    mean_acts = sum_core_acts / T
+    mean_msgs = sum_core_msgs / T
+
+    w_nnz = sum(float((l.weights != 0).sum()) for l in net.layers)
+    w_cap = sum(l.n_weights for l in net.layers)
+    metrics = WorkloadMetrics(
+        synops=LoadStats.of(mean_synops),
+        acts=LoadStats.of(mean_acts),
+        traffic=LoadStats.of(np.array([max_link_steps.mean()])),
+        msgs_total=total_msgs / T,
+        weight_density=w_nnz / max(w_cap, 1),
+        act_density=(total_msgs / max(total_neuron_steps, 1.0)),
+    )
+    bottleneck = max(stage_votes.items(), key=lambda kv: kv[1])[0]
+    return SimReport(
+        time_per_step=float(times.mean()),
+        energy_per_step=float(energies.mean()),
+        times=times, energies=energies, metrics=metrics,
+        max_synops=float(max_synops_steps.mean()),
+        max_acts=float(max_acts_steps.mean()),
+        max_link_load=float(max_link_steps.mean()),
+        n_cores_active=n_logical,
+        outputs=outputs,
+        per_core_synops=mean_synops,
+        per_core_acts=mean_acts,
+        per_core_msgs_out=mean_msgs,
+        bottleneck_stage=bottleneck,
+    )

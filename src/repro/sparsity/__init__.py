@@ -1,0 +1,9 @@
+from repro.sparsity.regularizers import (synops_loss, tl1_regularizer,
+                                         activation_density)
+from repro.sparsity.pruning import (apply_masks, magnitude_prune_masks,
+                                    prune_and_finetune_sweep)
+from repro.sparsity.sigma_delta import calibrate_thresholds
+
+__all__ = ["synops_loss", "tl1_regularizer", "activation_density",
+           "apply_masks", "magnitude_prune_masks",
+           "prune_and_finetune_sweep", "calibrate_thresholds"]

@@ -1,0 +1,57 @@
+"""Magnitude pruning + fine-tune (paper §VII-A, S5 workload).
+
+One-shot global or per-tensor magnitude pruning to a target weight sparsity
+followed by masked fine-tuning — the S5 stage-1 recipe ("prune the smallest
+0.1..0.9 of weights away in one shot, and fine-tune").
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def magnitude_prune_masks(params, sparsity: float, *,
+                          min_size: int = 64):
+    """0/1 masks keeping the largest-|w| (1-sparsity) fraction per tensor.
+    Tensors smaller than min_size (biases, norms) are never pruned."""
+    def one(p):
+        if p.size < min_size or p.ndim < 2:
+            return jnp.ones_like(p, dtype=jnp.float32)
+        k = int(p.size * (1.0 - sparsity))
+        flat = jnp.abs(p.astype(jnp.float32)).reshape(-1)
+        if k <= 0:
+            return jnp.zeros_like(p, dtype=jnp.float32)
+        thresh = jnp.sort(flat)[-k]
+        return (jnp.abs(p.astype(jnp.float32)) >= thresh).astype(jnp.float32)
+    return jax.tree.map(one, params)
+
+
+def apply_masks(params, masks):
+    return jax.tree.map(lambda p, m: (p.astype(jnp.float32) * m
+                                      ).astype(p.dtype), params, masks)
+
+
+def weight_sparsity(params, masks=None) -> float:
+    leaves = jax.tree.leaves(masks if masks is not None else params)
+    nz = sum(float(jnp.sum(m != 0)) for m in leaves)
+    tot = sum(m.size for m in leaves)
+    return 1.0 - nz / max(tot, 1)
+
+
+def prune_and_finetune_sweep(params, train_steps: Callable,
+                             sparsities: list[float],
+                             finetune_steps: int = 50):
+    """For each target sparsity: one-shot prune -> masked fine-tune.
+    ``train_steps(params, masks, n)`` must return (params, final_metrics).
+    Returns [(sparsity, params, metrics), ...] — the Fig. 10 Pareto sweep."""
+    out = []
+    for s in sparsities:
+        masks = magnitude_prune_masks(params, s)
+        pruned = apply_masks(params, masks)
+        tuned, metrics = train_steps(pruned, masks, finetune_steps)
+        tuned = apply_masks(tuned, masks)        # keep exactly masked
+        out.append((s, tuned, metrics))
+    return out

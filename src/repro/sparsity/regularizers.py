@@ -1,0 +1,56 @@
+"""Stage-1 sparsity-aware training losses (paper §VI-B / §VII-A).
+
+* ``tl1_regularizer``  — transformed-L1 activation penalty [63]:
+  rho_a(x) = (a+1)|x| / (a + |x|): near-L0 for small a, used to induce ReLU
+  activation sparsity on AKD1000-style CNNs (applied to the pre-trained
+  baseline, then fine-tuned).
+* ``synops_loss``      — Sorbaro et al. [50] synaptic-operation loss: the
+  expected downstream synops of each layer's activations (activation count
+  weighted by fan-out), matching the paper's Speck training setup.  This is
+  the neurocore-aware (M0) training signal: per-LAYER sums are returned so
+  imbalanced layers can be targeted.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tl1_regularizer(acts: list[jax.Array], a: float = 1.0) -> jax.Array:
+    """Transformed-L1 penalty over a list of (post-ReLU) activations."""
+    total = jnp.float32(0.0)
+    count = 0
+    for x in acts:
+        ax = jnp.abs(x.astype(jnp.float32))
+        total = total + jnp.sum((a + 1.0) * ax / (a + ax))
+        count += x.size
+    return total / max(count, 1)
+
+
+def activation_density(acts: list[jax.Array], thresh: float = 0.0):
+    """Per-layer and total activation density (fraction > thresh)."""
+    per_layer = [jnp.mean((x > thresh).astype(jnp.float32)) for x in acts]
+    total = sum(jnp.sum((x > thresh).astype(jnp.float32)) for x in acts) / \
+        max(sum(x.size for x in acts), 1)
+    return per_layer, total
+
+
+def synops_loss(acts: list[jax.Array], fanouts: list[int],
+                surrogate: str = "abs") -> jax.Array:
+    """Expected synops: sum_l fanout_l * E[activity_l].
+
+    ``surrogate``: 'abs' uses |a| (differentiable proxy for spike counts /
+    message magnitude); 'count' uses a straight-through 0/1 estimate."""
+    total = jnp.float32(0.0)
+    norm = 0.0
+    for x, f in zip(acts, fanouts):
+        xf = x.astype(jnp.float32)
+        if surrogate == "abs":
+            act = jnp.abs(xf)
+        else:
+            hard = (xf > 0).astype(jnp.float32)
+            act = hard + xf - jax.lax.stop_gradient(xf)   # straight-through
+        total = total + f * jnp.mean(act)
+        norm += f
+    return total / max(norm, 1.0)

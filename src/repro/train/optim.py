@@ -1,0 +1,161 @@
+"""Optimizers (pure pytree, no external deps) + ZeRO-1 state sharding specs.
+
+* ``adamw``     — mixed precision: f32 master weights + f32 (m, v); ZeRO-1
+                  shards all three over `data`.
+* ``adafactor`` — factored second moments (rows/cols over the last two
+  dims), update clipping, no master copy: the right choice when Adam states
+  would not fit (kimi-k2 1T: Adam needs ~16 bytes/param = 16.4 TB; Adafactor
+  ~4e-3 bytes/param of state).  Selected per-arch by the launcher.
+
+Both expose:  init(params) -> state;  update(grads, state, params, step)
+-> (new_params, new_state);  state_specs(params, param_specs, ctx).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import zero1_specs
+from repro.models.layers import ShardCtx
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jax.Array], tuple[Any, Any]]
+    state_specs: Callable[[Any, Any, ShardCtx], Any]
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ------------------------------------------------------------------ AdamW
+
+def adamw(lr_fn: Callable[[jax.Array], jax.Array], *, b1: float = 0.9,
+          b2: float = 0.95, eps: float = 1e-8, weight_decay: float = 0.1,
+          grad_clip: float = 1.0) -> Optimizer:
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(f32, params),
+                "v": jax.tree.map(f32, params),
+                "master": jax.tree.map(
+                    lambda p: p.astype(jnp.float32), params)}
+
+    def update(grads, state, params, step):
+        grads, gnorm = clip_by_global_norm(grads, grad_clip)
+        t = step.astype(jnp.float32) + 1.0
+        lr = lr_fn(step)
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd(g, m, v, w):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * jnp.square(g)
+            u = (m / c1) / (jnp.sqrt(v / c2) + eps)
+            if w.ndim >= 2:                     # no decay on norms/scalars
+                u = u + weight_decay * w
+            w = w - lr * u
+            return m, v, w
+        out = jax.tree.map(upd, grads, state["m"], state["v"],
+                           state["master"])
+        m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda o: isinstance(o, tuple))
+        v = jax.tree.map(lambda o: o[1], out, is_leaf=lambda o: isinstance(o, tuple))
+        master = jax.tree.map(lambda o: o[2], out, is_leaf=lambda o: isinstance(o, tuple))
+        new_params = jax.tree.map(lambda w, p: w.astype(p.dtype), master,
+                                  params)
+        return new_params, {"m": m, "v": v, "master": master}
+
+    def state_specs(params, specs, ctx):
+        z = zero1_specs(params, specs, ctx)
+        return {"m": z, "v": z, "master": z}
+
+    return Optimizer("adamw", init, update, state_specs)
+
+
+# --------------------------------------------------------------- Adafactor
+
+def adafactor(lr_fn: Callable[[jax.Array], jax.Array], *,
+              eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay_pow: float = 0.8, weight_decay: float = 0.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    def factored(p):
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def one(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {"fac": jax.tree.map(one, params)}
+
+    def update(grads, state, params, step):
+        t = step.astype(jnp.float32) + 1.0
+        beta2 = 1.0 - t ** (-decay_pow)
+        lr = lr_fn(step)
+
+        def upd(g, s, w):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta2 * s["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+                vc = beta2 * s["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+                r = vr / jnp.mean(vr, axis=-1, keepdims=True)
+                u = g / jnp.sqrt(r[..., None] * vc[..., None, :] + eps)
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta2 * s["v"] + (1 - beta2) * g2
+                u = g / jnp.sqrt(v + eps)
+                new_s = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if weight_decay and w.ndim >= 2:
+                u = u + weight_decay * w.astype(jnp.float32)
+            new_w = (w.astype(jnp.float32) - lr * u).astype(w.dtype)
+            return new_s, new_w
+
+        out = jax.tree.map(upd, grads, state["fac"], params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("v" in x or "vr" in x))
+        fac = jax.tree.map(lambda o: o[0], out,
+                           is_leaf=lambda o: isinstance(o, tuple))
+        new_params = jax.tree.map(lambda o: o[1], out,
+                                  is_leaf=lambda o: isinstance(o, tuple))
+        return new_params, {"fac": fac}
+
+    def state_specs(params, specs, ctx):
+        def one(p, s):
+            dims = tuple(s) + (None,) * (p.ndim - len(tuple(s)))
+            if factored(p):
+                return {"vr": P(*dims[:-1]),
+                        "vc": P(*(dims[:-2] + dims[-1:]))}
+            return {"v": P(*dims)}
+        return {"fac": jax.tree.map(one, params, specs)}
+
+    return Optimizer("adafactor", init, update, state_specs)
+
+
+def for_arch(arch_param_count: int, lr_fn) -> Optimizer:
+    """Launcher policy: Adafactor above 100B params (memory-bound decision
+    — the paper's M1 move applied to optimizer state), AdamW otherwise."""
+    if arch_param_count > 100e9:
+        return adafactor(lr_fn)
+    return adamw(lr_fn)

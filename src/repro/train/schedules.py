@@ -1,0 +1,38 @@
+"""LR schedules. WSD (warmup-stable-decay) is the minicpm-2b preset."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.float32(lr)
+
+
+def linear_warmup(lr: float, warmup: int):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        return jnp.float32(lr) * jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+    return fn
+
+
+def cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        c = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.float32(lr) * w * c
+    return fn
+
+
+def wsd(lr: float, warmup: int, stable: int, decay: int,
+        final_frac: float = 0.01):
+    """Warmup-Stable-Decay (minicpm): linear warmup, flat stable phase,
+    exponential-ish (linear here) decay tail."""
+    def fn(step):
+        s = step.astype(jnp.float32)
+        w = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+        d = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+        return jnp.float32(lr) * w * (1.0 - (1.0 - final_frac) * d)
+    return fn

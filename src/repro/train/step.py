@@ -1,0 +1,142 @@
+"""Train / serve step builders — shared by the launchers and the dry-run.
+
+``make_train_step`` performs microbatched gradient accumulation with
+``lax.scan``: per-microbatch backward passes release activation memory and
+XLA overlaps the (reduce-scattered) gradient collectives of microbatch i
+with the compute of microbatch i+1.  Gradient accumulators are constrained
+to ``grad_specs`` (giant MoE leaves additionally shard over `pod` so the
+cross-pod DP path is a reduce-scatter, never a replicated all-reduce).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding
+from repro.models import encdec, lm
+from repro.models.common import ModelCfg
+from repro.models.encdec import EncDecCfg
+from repro.models.layers import ShardCtx
+from repro.train.optim import Optimizer
+
+
+def _loss_for(cfg):
+    return encdec.loss_fn if isinstance(cfg, EncDecCfg) else lm.loss_fn
+
+
+def make_train_step(cfg, ctx: ShardCtx, optimizer: Optimizer, *,
+                    num_microbatches: int = 1,
+                    grad_accum_dtype: str | None = None,
+                    grad_spec_tree=None) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    state = {"params", "opt", "step"}.  batch leaves have a leading global
+    batch dim divisible by num_microbatches.
+    """
+    loss_f = _loss_for(cfg)
+    M = num_microbatches
+
+    def constrain_grads(g):
+        if grad_spec_tree is None or ctx.mesh is None:
+            return g
+        return jax.lax.with_sharding_constraint(
+            g, jax.tree.map(lambda s: NamedSharding(ctx.mesh, s),
+                            grad_spec_tree))
+
+    def train_step(state, batch):
+        params = state["params"]
+
+        def lf(p, mb):
+            return loss_f(p, mb, cfg, ctx)
+
+        if M == 1:
+            (_, metrics), grads = jax.value_and_grad(
+                lf, has_aux=True)(params, batch)
+            grads = constrain_grads(grads)
+        else:
+            mb_batch = jax.tree.map(
+                lambda x: x.reshape((M, x.shape[0] // M) + x.shape[1:]),
+                batch)
+            acc_dt = grad_accum_dtype or "float32"
+            import repro.models.layers as L
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, L.dt(acc_dt)), params)
+            gz = constrain_grads(gz)
+
+            def body(carry, mb):
+                gacc, macc, n = carry
+                (_, metrics), g = jax.value_and_grad(
+                    lf, has_aux=True)(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(a.dtype), gacc, g)
+                gacc = constrain_grads(gacc)
+                macc = jax.tree.map(lambda a, b: a + b, macc, metrics)
+                return (gacc, macc, n + 1), None
+
+            m0 = jax.eval_shape(
+                lambda p: lf(p, jax.tree.map(lambda x: x[0], mb_batch))[1],
+                params)
+            m0 = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), m0)
+            (grads, metrics, _), _ = jax.lax.scan(
+                body, (gz, m0, 0), mb_batch)
+            grads = jax.tree.map(lambda g: g / M, grads)
+            metrics = jax.tree.map(lambda m: m / M, metrics)
+
+        new_params, new_opt = optimizer.update(
+            grads, state["opt"], params, state["step"])
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg, ctx: ShardCtx) -> Callable:
+    if isinstance(cfg, EncDecCfg):
+        def step(params, batch):
+            enc_out = encdec.encode(params, batch["frontend_embeds"], cfg,
+                                    ctx)
+            h = encdec.decode_train(params, enc_out, batch["tokens"], cfg,
+                                    ctx)
+            logits = jnp.einsum("bsd,dv->bsv", h[:, -1:],
+                                params["embed"].T,
+                                preferred_element_type=jnp.float32)
+            return logits[:, 0], enc_out
+        return step
+
+    def step(params, batch):
+        return lm.prefill(params, batch["tokens"], cfg, ctx,
+                          frontend_embeds=batch.get("frontend_embeds"))
+    return step
+
+
+def make_serve_step(cfg, ctx: ShardCtx) -> Callable:
+    """serve_step(params, cache, tokens, pos) -> (logits, new_cache)."""
+    if isinstance(cfg, EncDecCfg):
+        def step(params, cache, tokens, pos):
+            return encdec.decode_step(params, tokens, cache, pos, cfg, ctx)
+        return step
+
+    def step(params, cache, tokens, pos):
+        return lm.decode_step(params, tokens, cache, pos, cfg, ctx)
+    return step
+
+
+def init_state(cfg, optimizer: Optimizer, key):
+    init_p = (encdec.init_params if isinstance(cfg, EncDecCfg)
+              else lm.init_params)
+    params = init_p(cfg, key)
+    return {"params": params, "opt": optimizer.init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_spec_tree(cfg, ctx: ShardCtx, optimizer: Optimizer,
+                    abstract_params):
+    pspecs = sharding.param_specs(cfg, ctx)
+    ospecs = optimizer.state_specs(abstract_params, pspecs, ctx)
+    return {"params": pspecs, "opt": ospecs, "step": P()}

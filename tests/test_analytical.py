@@ -1,0 +1,141 @@
+"""Unit + property tests for the §III analytical model."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.analytical import (Bottleneck, LayerConfig, OpCosts,
+                                   layer_op_counts, min_cores_for_layer,
+                                   p_neuron_messaged, predict_bottleneck,
+                                   sweep_width_scaling)
+
+cfg_st = st.builds(
+    LayerConfig,
+    n_neurons=st.integers(8, 4096),
+    weight_density=st.floats(0.01, 1.0),
+    msg_density=st.floats(0.01, 1.0),
+    cores=st.integers(1, 32),
+    cores_next=st.integers(1, 32),
+    width_scale=st.floats(1.0, 8.0),
+)
+
+
+class TestBaseCase:
+    def test_single_core_counts_match_formulas(self):
+        cfg = LayerConfig(n_neurons=1000, weight_density=0.5, msg_density=0.2)
+        c = layer_op_counts(cfg)
+        assert c.synops_per_core == pytest.approx(0.2 * 0.5 * 1000**2)
+        assert c.act_computes_per_core == pytest.approx(1000)
+        assert c.traffic_total == pytest.approx(0.2 * 1000)
+
+    def test_dense_low_sparsity_is_memory_bound(self):
+        cfg = LayerConfig(n_neurons=1024, weight_density=1.0, msg_density=0.5)
+        assert predict_bottleneck(cfg) is Bottleneck.MEMORY
+
+    def test_extreme_sparsity_escapes_memory_bound(self):
+        cfg = LayerConfig(n_neurons=1024, weight_density=0.001,
+                          msg_density=0.001)
+        assert predict_bottleneck(cfg) is not Bottleneck.MEMORY
+
+    def test_p_neuron_messaged_monotone_and_bounded(self):
+        ps = [p_neuron_messaged(n, 0.1) for n in (0, 1, 10, 100, 10000)]
+        assert ps[0] == 0.0
+        assert all(0.0 <= p <= 1.0 for p in ps)
+        assert ps == sorted(ps)
+
+    def test_idealized_acts_leq_full(self):
+        cfg = LayerConfig(n_neurons=512, weight_density=0.01, msg_density=0.01)
+        ideal = layer_op_counts(cfg, idealized_acts=True)
+        full = layer_op_counts(cfg)
+        assert ideal.act_computes_per_core <= full.act_computes_per_core
+
+
+class TestVoluntaryPartitioning:
+    """§III-C: synops/core fall linearly with C, traffic rises linearly."""
+
+    def test_synops_fall_traffic_rises(self):
+        base = LayerConfig(n_neurons=1024, weight_density=0.5, msg_density=0.3)
+        c1 = layer_op_counts(base)
+        c4 = layer_op_counts(LayerConfig(1024, 0.5, 0.3, cores=4, cores_next=4))
+        assert c4.synops_per_core == pytest.approx(c1.synops_per_core / 4)
+        assert c4.traffic_total == pytest.approx(c1.traffic_total * 4)
+
+    def test_partitioning_shifts_memory_to_traffic(self):
+        costs = OpCosts()
+        narrow = LayerConfig(n_neurons=512, weight_density=0.2, msg_density=0.3)
+        assert predict_bottleneck(narrow, costs) is Bottleneck.MEMORY
+        split = LayerConfig(n_neurons=512, weight_density=0.2, msg_density=0.3,
+                            cores=32, cores_next=32)
+        assert predict_bottleneck(split, costs) is Bottleneck.TRAFFIC
+
+
+class TestForcedUtilization:
+    """§III-D: width x => cores O(x^2), traffic O(x^3), synops/core constant."""
+
+    def test_cores_quadratic_traffic_cubic(self):
+        base = LayerConfig(n_neurons=256, weight_density=0.5, msg_density=0.3)
+        sweep = sweep_width_scaling(base, [1.0, 2.0, 4.0])
+        c1, c2, c4 = sweep
+        assert c2.cores_used == pytest.approx(4 * c1.cores_used)
+        assert c4.cores_used == pytest.approx(16 * c1.cores_used)
+        assert c2.traffic_total == pytest.approx(8 * c1.traffic_total)
+        assert c4.traffic_total == pytest.approx(64 * c1.traffic_total)
+        # synops per core do not change with width
+        assert c2.synops_per_core == pytest.approx(c1.synops_per_core)
+        assert c4.synops_per_core == pytest.approx(c1.synops_per_core)
+
+    def test_wide_layers_go_traffic_bound(self):
+        wide = LayerConfig(n_neurons=256, weight_density=0.5, msg_density=0.3,
+                           width_scale=8.0)
+        assert predict_bottleneck(wide) is Bottleneck.TRAFFIC
+
+
+class TestProperties:
+    @given(cfg_st)
+    @settings(max_examples=100, deadline=None)
+    def test_counts_nonnegative_and_finite(self, cfg):
+        c = layer_op_counts(cfg)
+        for v in (c.synops_per_core, c.act_computes_per_core, c.traffic_total):
+            assert v >= 0 and math.isfinite(v)
+
+    @given(cfg_st, st.floats(0.01, 1.0))
+    @settings(max_examples=100, deadline=None)
+    def test_synops_monotone_in_weight_density(self, cfg, w2):
+        import dataclasses
+        lo, hi = sorted([cfg.weight_density, w2])
+        c_lo = layer_op_counts(dataclasses.replace(cfg, weight_density=lo))
+        c_hi = layer_op_counts(dataclasses.replace(cfg, weight_density=hi))
+        assert c_lo.synops_per_core <= c_hi.synops_per_core + 1e-9
+
+    @given(cfg_st)
+    @settings(max_examples=100, deadline=None)
+    def test_more_cores_never_increases_per_core_synops(self, cfg):
+        import dataclasses
+        c1 = layer_op_counts(cfg)
+        c2 = layer_op_counts(dataclasses.replace(cfg, cores=cfg.cores * 2))
+        assert c2.synops_per_core <= c1.synops_per_core + 1e-9
+        assert c2.act_computes_per_core <= c1.act_computes_per_core + 1e-9
+
+    @given(st.integers(1, 10**6), st.integers(1, 10**4),
+           st.integers(1, 8192), st.integers(1, 1 << 20))
+    @settings(max_examples=100, deadline=None)
+    def test_min_cores_satisfies_both_limits(self, n, fanin, npc, spc):
+        c = min_cores_for_layer(n, fanin, neurons_per_core=npc,
+                                synapses_per_core=spc)
+        assert math.ceil(n / c) <= npc or c >= math.ceil(n / npc)
+        assert c >= max(math.ceil(n / npc), math.ceil(n * fanin / spc))
+
+
+def test_invalid_configs_rejected():
+    with pytest.raises(ValueError):
+        LayerConfig(n_neurons=10, weight_density=1.5, msg_density=0.5)
+    with pytest.raises(ValueError):
+        LayerConfig(n_neurons=10, weight_density=0.5, msg_density=-0.1)
+    with pytest.raises(ValueError):
+        LayerConfig(n_neurons=10, weight_density=0.5, msg_density=0.5, cores=0)
+    with pytest.raises(ValueError):
+        LayerConfig(n_neurons=10, weight_density=0.5, msg_density=0.5,
+                    width_scale=0.5)

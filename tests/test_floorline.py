@@ -1,0 +1,100 @@
+"""Tests for the floorline performance model (§VI-A)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.analytical import Bottleneck
+from repro.core.floorline import (FloorlineModel, WorkloadPoint, fit_floorline,
+                                  floorline_curve)
+
+
+def model():
+    return FloorlineModel(mem_latency=2.0, act_latency=5.0, t0=10.0)
+
+
+class TestClassification:
+    def test_on_slope_is_memory_bound(self):
+        m = model()
+        p = WorkloadPoint(max_synops=1000, max_acts=10,
+                          time=m.predicted_time(1000, 10))
+        assert m.classify(p) is Bottleneck.MEMORY
+
+    def test_on_floor_is_compute_bound(self):
+        m = model()
+        p = WorkloadPoint(max_synops=1, max_acts=500,
+                          time=m.predicted_time(1, 500))
+        assert m.classify(p) is Bottleneck.COMPUTE
+
+    def test_above_line_is_traffic_bound(self):
+        m = model()
+        bound = m.predicted_time(1000, 10)
+        p = WorkloadPoint(max_synops=1000, max_acts=10, time=bound * 2.0)
+        assert m.classify(p) is Bottleneck.TRAFFIC
+
+    def test_recommendations_match_states(self):
+        m = model()
+        mem = WorkloadPoint(1000, 10, m.predicted_time(1000, 10))
+        assert "partition" in m.recommend(mem).action
+        assert m.recommend(mem).state is Bottleneck.MEMORY
+
+    def test_efficiency_leq_one_above_line(self):
+        m = model()
+        p = WorkloadPoint(1000, 10, m.predicted_time(1000, 10) * 3)
+        assert m.efficiency(p) <= 1.0
+
+
+class TestFit:
+    def test_recovers_known_parameters(self):
+        true = FloorlineModel(mem_latency=1.5, act_latency=4.0, t0=0.0)
+        rng = np.random.default_rng(0)
+        pts = []
+        for _ in range(60):
+            s = float(rng.uniform(10, 10000))
+            a = float(rng.uniform(10, 500))
+            pts.append(WorkloadPoint(s, a, true.predicted_time(s, a)))
+        fit = fit_floorline(pts)
+        assert fit.mem_latency == pytest.approx(1.5, rel=0.15)
+        assert fit.act_latency == pytest.approx(4.0, rel=0.15)
+
+    def test_fit_ignores_traffic_outliers(self):
+        true = FloorlineModel(mem_latency=1.0, act_latency=1.0, t0=0.0)
+        rng = np.random.default_rng(1)
+        pts = [WorkloadPoint(s := float(rng.uniform(100, 5000)), 10.0,
+                             true.predicted_time(s, 10.0))
+               for _ in range(40)]
+        # add traffic-bound points 5x above the line
+        pts += [WorkloadPoint(s := float(rng.uniform(100, 5000)), 10.0,
+                              5 * true.predicted_time(s, 10.0))
+                for _ in range(10)]
+        fit = fit_floorline(pts)
+        assert fit.mem_latency == pytest.approx(1.0, rel=0.2)
+
+    def test_fit_empty_raises(self):
+        with pytest.raises(ValueError):
+            fit_floorline([])
+
+    @given(st.floats(0.1, 10), st.floats(0.1, 10))
+    @settings(max_examples=30, deadline=None)
+    def test_fit_roundtrip_property(self, mem, act):
+        true = FloorlineModel(mem_latency=mem, act_latency=act, t0=0.0)
+        rng = np.random.default_rng(42)
+        pts = []
+        for _ in range(50):
+            s = float(rng.uniform(1, 1000))
+            a = float(rng.uniform(1, 1000))
+            pts.append(WorkloadPoint(s, a, true.predicted_time(s, a)))
+        fit = fit_floorline(pts)
+        # predicted times agree even if individual params are degenerate
+        for p in pts[:10]:
+            assert fit.predicted_time(p.max_synops, p.max_acts) == pytest.approx(
+                p.time, rel=0.35)
+
+
+def test_floorline_curve_shape_and_floor():
+    m = model()
+    xs, ys = floorline_curve(m, max_acts=100, synops_range=(1, 10000))
+    assert xs.shape == ys.shape
+    assert np.all(np.diff(ys) >= -1e-9)          # monotone non-decreasing
+    assert ys[0] == pytest.approx(m.compute_floor(100))   # flat floor at left

@@ -1,0 +1,149 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import block_activity, event_matmul, sigma_delta_encode
+from repro.kernels.event_matmul.ref import (block_activity_ref,
+                                            event_matmul_ref, event_stats_ref)
+from repro.kernels.sigma_delta.ref import sigma_delta_ref
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 else dict(
+        atol=1e-4, rtol=1e-4)
+
+
+def make_block_sparse(rng, m, k, density, bm, bk, dtype):
+    """Activations with a controlled fraction of active (bm, bk) tiles."""
+    x = rng.normal(size=(m, k)).astype(np.float32)
+    mb, kb = -(-m // bm), -(-k // bk)
+    keep = rng.random((mb, kb)) < density
+    mask = np.repeat(np.repeat(keep, bm, 0), bk, 1)[:m, :k]
+    return jnp.asarray((x * mask), dtype=dtype)
+
+
+class TestEventMatmul:
+    @pytest.mark.parametrize("m,k,n", [
+        (128, 128, 128), (256, 512, 256), (384, 256, 640),
+        (130, 257, 100), (8, 1024, 128), (1, 128, 128),
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shape_dtype_sweep(self, m, k, n, dtype):
+        rng = np.random.default_rng(m * 7 + k + n)
+        x = make_block_sparse(rng, m, k, 0.5, 128, 128, dtype)
+        w = jnp.asarray(rng.normal(size=(k, n)), dtype=dtype)
+        y = event_matmul(x, w, threshold=0.0)
+        xp = jnp.pad(x, [(0, (-m) % 128), (0, (-k) % 128)])
+        wp = jnp.pad(w, [(0, (-k) % 128), (0, (-n) % 128)])
+        yr = event_matmul_ref(xp, wp, threshold=0.0, bm=128, bk=128)[:m, :n]
+        np.testing.assert_allclose(np.asarray(y, np.float32),
+                                   np.asarray(yr, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("blocks", [(128, 128, 128), (256, 128, 256),
+                                        (8, 128, 128)])
+    def test_block_size_sweep(self, blocks):
+        bm, bk, bn = blocks
+        rng = np.random.default_rng(3)
+        x = make_block_sparse(rng, 2 * bm, 4 * bk, 0.4, bm, bk, jnp.float32)
+        w = jnp.asarray(rng.normal(size=(4 * bk, 2 * bn)), jnp.float32)
+        y = event_matmul(x, w, threshold=0.0, bm=bm, bk=bk, bn=bn)
+        yr = event_matmul_ref(x, w, threshold=0.0, bm=bm, bk=bk)
+        np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
+
+    def test_threshold_drops_small_blocks(self):
+        rng = np.random.default_rng(5)
+        x = jnp.asarray(rng.normal(size=(128, 256)) * 0.01, jnp.float32)
+        w = jnp.asarray(rng.normal(size=(256, 128)), jnp.float32)
+        y = event_matmul(x, w, threshold=1.0)     # everything sub-threshold
+        assert float(jnp.abs(y).max()) == 0.0
+
+    def test_fully_dense_matches_plain_matmul(self):
+        rng = np.random.default_rng(6)
+        x = jnp.asarray(rng.normal(size=(256, 384)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(384, 256)), jnp.float32)
+        y = event_matmul(x, w, threshold=0.0)
+        np.testing.assert_allclose(y, x @ w, atol=1e-3, rtol=1e-4)
+
+    def test_contraction_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            event_matmul(jnp.zeros((8, 16)), jnp.zeros((32, 8)))
+
+    @given(density=st.floats(0.0, 1.0), seed=st.integers(0, 100))
+    @settings(max_examples=15, deadline=None)
+    def test_property_matches_ref_any_density(self, density, seed):
+        rng = np.random.default_rng(seed)
+        x = make_block_sparse(rng, 256, 384, density, 128, 128, jnp.float32)
+        w = jnp.asarray(rng.normal(size=(384, 128)), jnp.float32)
+        y = event_matmul(x, w, threshold=0.0)
+        yr = event_matmul_ref(x, w, threshold=0.0, bm=128, bk=128)
+        np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
+
+    def test_activity_counters(self):
+        rng = np.random.default_rng(9)
+        x = make_block_sparse(rng, 256, 512, 0.25, 128, 128, jnp.float32)
+        act = block_activity(x, 0.0)
+        stats = event_stats_ref(x, 0.0, 128, 128)
+        assert int(act.sum()) == int(stats["active_blocks"])
+        assert stats["block_density"] <= 1.0
+
+
+class TestSigmaDelta:
+    @pytest.mark.parametrize("shape", [(32, 512), (7, 300), (4, 16, 128),
+                                       (1, 1)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_shape_dtype_sweep(self, shape, dtype):
+        rng = np.random.default_rng(sum(shape))
+        a = jnp.asarray(rng.normal(size=shape), dtype)
+        s = jnp.asarray(rng.normal(size=shape), dtype)
+        q, s2 = sigma_delta_encode(a, s, theta=0.1)
+        qr, sr = sigma_delta_ref(a, s, theta=0.1)
+        np.testing.assert_allclose(np.asarray(q, np.float32),
+                                   np.asarray(qr, np.float32), **_tol(dtype))
+        np.testing.assert_allclose(np.asarray(s2, np.float32),
+                                   np.asarray(sr, np.float32), **_tol(dtype))
+
+    def test_steady_state_sends_nothing(self):
+        a = jnp.ones((16, 256))
+        q1, s1 = sigma_delta_encode(a, jnp.zeros_like(a), theta=0.05)
+        q2, s2 = sigma_delta_encode(a, s1, theta=0.05)
+        assert float(jnp.abs(q2).max()) == 0.0
+
+    def test_reconstruction_error_bounded_by_theta(self):
+        """Property: after encoding, |a - s_new| < theta everywhere."""
+        rng = np.random.default_rng(11)
+        a = jnp.asarray(rng.normal(size=(64, 512)), jnp.float32)
+        s = jnp.asarray(rng.normal(size=(64, 512)), jnp.float32)
+        theta = 0.2
+        _, s_new = sigma_delta_encode(a, s, theta=theta)
+        assert float(jnp.abs(a - s_new).max()) < theta
+
+    @given(theta=st.floats(0.01, 2.0), seed=st.integers(0, 50))
+    @settings(max_examples=15, deadline=None)
+    def test_property_messages_quantized(self, theta, seed):
+        rng = np.random.default_rng(seed)
+        a = jnp.asarray(rng.normal(size=(32, 256)), jnp.float32)
+        q, _ = sigma_delta_encode(a, jnp.zeros_like(a), theta=theta)
+        qn = np.asarray(q)
+        nz = qn[qn != 0]
+        # all messages are integer multiples of theta
+        np.testing.assert_allclose(nz / theta, np.round(nz / theta),
+                                   atol=1e-3)
+
+    def test_bad_theta_raises(self):
+        with pytest.raises(ValueError):
+            sigma_delta_encode(jnp.zeros((4, 4)), jnp.zeros((4, 4)), theta=0.0)
+
+
+def test_kernels_jit_cacheable():
+    """Repeated calls hit the jit cache (no retrace explosion)."""
+    x = jnp.ones((128, 256))
+    w = jnp.ones((256, 128))
+    y1 = event_matmul(x, w, threshold=0.0)
+    y2 = event_matmul(x * 2, w, threshold=0.0)
+    np.testing.assert_allclose(y2, 2 * y1, rtol=1e-5)

@@ -1,0 +1,66 @@
+"""flash_attn Pallas kernel vs jnp oracle: shape/dtype/mask sweeps in
+interpret mode (CPU) + hypothesis property test."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.flash_attn import flash_attention, flash_attention_ref
+
+
+def _rand(key, B, Sq, Skv, H, K, hd, dtype):
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, Sq, H, hd), jnp.float32).astype(dtype)
+    k = jax.random.normal(kk, (B, Skv, K, hd), jnp.float32).astype(dtype)
+    v = jax.random.normal(kv, (B, Skv, K, hd), jnp.float32).astype(dtype)
+    return q, k, v
+
+
+CASES = [
+    # B, Sq, Skv, H, K, hd, window, softcap, dtype
+    (1, 128, 128, 2, 2, 64, None, None, jnp.float32),
+    (2, 256, 256, 4, 2, 64, None, None, jnp.float32),      # GQA
+    (1, 128, 256, 4, 1, 128, None, None, jnp.float32),     # MQA, Sq<Skv
+    (1, 256, 256, 2, 2, 64, 128, None, jnp.float32),       # local window
+    (1, 128, 128, 2, 2, 64, None, 50.0, jnp.float32),      # softcap
+    (1, 128, 128, 2, 2, 64, None, None, jnp.bfloat16),
+    (1, 200, 200, 2, 2, 64, None, None, jnp.float32),      # padding path
+]
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,K,hd,window,softcap,dtype", CASES)
+def test_flash_matches_ref(B, Sq, Skv, H, K, hd, window, softcap, dtype):
+    q, k, v = _rand(jax.random.PRNGKey(0), B, Sq, Skv, H, K, hd, dtype)
+    got = flash_attention(q, k, v, causal=True, window=window,
+                          softcap=softcap, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True, window=window,
+                              softcap=softcap)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@given(st.integers(1, 3), st.sampled_from([128, 256]),
+       st.sampled_from([1, 2, 4]), st.integers(0, 2**31 - 1))
+@settings(max_examples=8, deadline=None)
+def test_flash_property_gqa(B, S, G, seed):
+    K, hd = 2, 64
+    q, k, v = _rand(jax.random.PRNGKey(seed), B, S, S, K * G, K, hd,
+                    jnp.float32)
+    got = flash_attention(q, k, v, interpret=True)
+    ref = flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+def test_flash_rows_sum_to_one_property():
+    """Degenerate v=1 -> output must be exactly 1 (softmax normalization
+    survives the lazy accumulation)."""
+    B, S, H, K, hd = 1, 256, 2, 2, 64
+    q, k, _ = _rand(jax.random.PRNGKey(7), B, S, S, H, K, hd, jnp.float32)
+    v = jnp.ones((B, S, K, hd), jnp.float32)
+    got = flash_attention(q, k, v, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 1.0, rtol=1e-5, atol=1e-5)

@@ -1,0 +1,80 @@
+"""Tests for the §VI-B backtracking partitioning/mapping optimizer."""
+
+import numpy as np
+import pytest
+
+from repro.core.partitioner import optimize_partitioning
+from repro.neuromorphic import (loihi2_like, make_inputs,
+                                programmed_fc_network, simulate)
+from repro.neuromorphic.partition import validate_partition
+
+
+def setup_workload(wd=0.6, ad=0.3, sizes=(1024, 1024, 1024, 1024)):
+    net = programmed_fc_network(list(sizes), weight_densities=[wd] * (len(sizes) - 1),
+                                act_densities=[ad] * (len(sizes) - 1), seed=0,
+                                weight_format="sparse")
+    xs = make_inputs(sizes[0], ad, 3, seed=1)
+    return net, xs
+
+
+class TestOptimizer:
+    def test_memory_bound_workload_improves(self):
+        prof = loihi2_like()
+        net, xs = setup_workload()
+        res = optimize_partitioning(
+            net, prof, lambda p, m: simulate(net, xs, prof, p, m),
+            max_iters=40)
+        base = simulate(net, xs, prof)
+        assert res.report.time_per_step < base.time_per_step * 0.75
+        assert validate_partition(net, res.partition, prof)
+
+    def test_never_exceeds_core_budget(self):
+        prof = loihi2_like()
+        net, xs = setup_workload()
+        res = optimize_partitioning(
+            net, prof, lambda p, m: simulate(net, xs, prof, p, m),
+            max_iters=60)
+        for step in res.history:
+            assert step.partition.total_cores <= prof.n_cores
+
+    def test_accepted_steps_monotone_time(self):
+        """Backtracking invariant: every accepted step improves time."""
+        prof = loihi2_like()
+        net, xs = setup_workload()
+        res = optimize_partitioning(
+            net, prof, lambda p, m: simulate(net, xs, prof, p, m),
+            max_iters=40)
+        accepted = [s.time for s in res.history if s.accepted]
+        assert all(t2 < t1 for t1, t2 in zip(accepted, accepted[1:]))
+
+    def test_trace_walks_down_memory_slope(self):
+        """§VII-C: the iterative procedure traces the memory boundary —
+        max synops and time both decrease along accepted steps."""
+        prof = loihi2_like()
+        net, xs = setup_workload()
+        res = optimize_partitioning(
+            net, prof, lambda p, m: simulate(net, xs, prof, p, m),
+            max_iters=40)
+        trace = res.trace
+        assert len(trace) >= 3
+        syn = [p[0] for p in trace]
+        assert all(s2 <= s1 + 1e-9 for s1, s2 in zip(syn, syn[1:]))
+
+    def test_terminates_on_compute_floor(self):
+        """A compute-bound workload (tiny synops) can't improve much by
+        splitting once neurons/core are small; optimizer must terminate."""
+        prof = loihi2_like()
+        net, xs = setup_workload(wd=0.02, ad=0.05, sizes=(256, 256, 256))
+        res = optimize_partitioning(
+            net, prof, lambda p, m: simulate(net, xs, prof, p, m),
+            max_iters=30)
+        assert res.history[-1].iteration <= 30
+
+    def test_history_records_rejections(self):
+        prof = loihi2_like()
+        net, xs = setup_workload()
+        res = optimize_partitioning(
+            net, prof, lambda p, m: simulate(net, xs, prof, p, m),
+            max_iters=40)
+        assert any(not s.accepted for s in res.history)
+        assert any("backtrack" in s.note for s in res.history if not s.accepted)

@@ -1,0 +1,53 @@
+"""Serving engine: batched generation across families + greedy consistency
+(engine decode path == running the model on the growing sequence)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.distributed import sharding
+from repro.models import lm
+from repro.models.layers import single_device_mesh
+from repro.serve.engine import Engine, ServeConfig
+
+FAMS = ["granite-3-2b", "gemma2-2b", "mamba2-1.3b", "recurrentgemma-2b",
+        "olmoe-1b-7b"]
+
+
+@pytest.mark.parametrize("arch", FAMS)
+def test_generate_runs(arch):
+    cfg = registry.get(arch).smoke()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    eng = Engine(cfg, params, single_device_mesh(),
+                 ServeConfig(max_new_tokens=6))
+    out = eng.generate([[1, 2, 3, 4, 5, 6, 7, 8],
+                        [2, 3, 4, 5, 6, 7, 8, 9]])
+    assert len(out) == 2 and all(len(o) == 6 for o in out)
+    assert all(0 <= t < cfg.vocab_size for o in out for t in o)
+
+
+@pytest.mark.parametrize("arch", ["granite-3-2b", "recurrentgemma-2b"])
+def test_engine_matches_teacher_forcing(arch):
+    """Greedy engine output == argmax of the full forward run token by
+    token (exercises prefill->decode cache handoff incl. ring rolls)."""
+    cfg = registry.get(arch).smoke()
+    ctx = sharding.make_ctx(single_device_mesh())
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    prompt = [3, 1, 4, 1, 5, 9, 2, 6, 5, 3, 5, 9]
+    N = 5
+    eng = Engine(cfg, params, single_device_mesh(),
+                 ServeConfig(max_new_tokens=N))
+    got = eng.generate([prompt])[0]
+
+    seq = list(prompt)
+    ref = []
+    for _ in range(N):
+        toks = jnp.asarray([seq], jnp.int32)
+        h, _ = lm.forward(params, toks, cfg, ctx)
+        logits = lm.logits_from_h(params, h, cfg, ctx)[0, -1]
+        nxt = int(jnp.argmax(logits))
+        ref.append(nxt)
+        seq.append(nxt)
+    assert got == ref, (got, ref)

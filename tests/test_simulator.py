@@ -1,0 +1,251 @@
+"""Tests for the neuromorphic chip simulator: exact counters, paper trends
+(Figs 2-8), platform semantics, and conservation properties."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.metrics import proxy_gap
+from repro.neuromorphic import (SimLayer, SimNetwork, akd1000_like, fc_network,
+                                loihi2_like, make_inputs, minimal_partition,
+                                ordered_mapping, programmed_fc_network,
+                                simulate, speck_like, strided_mapping)
+from repro.neuromorphic.partition import Partition, validate_partition
+
+
+def small_inputs(n=256, density=0.4, steps=3, seed=1):
+    return make_inputs(n, density, steps, seed)
+
+
+class TestCounters:
+    def test_fc_counters_exact(self):
+        """Counters must equal hand-computed values for a tiny known net."""
+        w = np.array([[1.0, 0.0, 2.0],
+                      [0.0, 0.0, 3.0]], np.float32)
+        layer = SimLayer(name="l0", kind="fc", weights=w)
+        x = np.array([5.0, 0.0], np.float32)           # one active input
+        y, st_, cnt, _ = layer.step(x, layer.init_state(), None)
+        assert cnt.msgs_in == 1
+        np.testing.assert_allclose(cnt.macs, [1, 0, 1])       # row 0 nnz
+        np.testing.assert_allclose(cnt.fetches_dense, [1, 1, 1])
+        np.testing.assert_allclose(y, [5.0, 0.0, 10.0])
+        np.testing.assert_allclose(cnt.msgs_out, [1, 0, 1])
+
+    def test_conv_macs_match_dense_einsum(self):
+        """Conv MAC counts == conv of masks (exactness oracle)."""
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(3, 3, 2, 4)).astype(np.float32)
+        w[np.abs(w) < 0.5] = 0.0
+        layer = SimLayer(name="c0", kind="conv", weights=w, in_hw=(8, 8))
+        x = rng.normal(size=(8 * 8 * 2,)).astype(np.float32)
+        x[np.abs(x) < 0.8] = 0.0
+        _, _, cnt, _ = layer.step(x, layer.init_state(), None)
+        # total nnz MACs = sum over output positions of active-input x nnz-w
+        assert cnt.macs.sum() > 0
+        assert cnt.macs.sum() <= cnt.fetches_dense.sum()
+        assert cnt.macs.shape == (layer.n_neurons,)
+
+    def test_total_synops_equals_sum_of_cores(self):
+        """Conservation: per-core segment sums preserve totals (M0 math)."""
+        net = fc_network([128, 96, 64], weight_density=0.5, seed=0)
+        xs = small_inputs(128)
+        prof = loihi2_like()
+        r1 = simulate(net, xs, prof, Partition((1, 1)))
+        r4 = simulate(net, xs, prof, Partition((4, 4)))
+        assert r1.metrics.synops.total == pytest.approx(
+            r4.metrics.synops.total, rel=1e-6)
+
+    @given(st.integers(1, 8), st.integers(1, 8))
+    @settings(max_examples=20, deadline=None)
+    def test_partition_preserves_totals_property(self, c1, c2):
+        net = fc_network([64, 48, 32], weight_density=0.7, seed=3)
+        xs = small_inputs(64, steps=2)
+        prof = loihi2_like()
+        ra = simulate(net, xs, prof, Partition((c1, c2)))
+        rb = simulate(net, xs, prof, Partition((1, 1)))
+        assert ra.metrics.synops.total == pytest.approx(
+            rb.metrics.synops.total, rel=1e-6)
+        assert ra.metrics.msgs_total == pytest.approx(
+            rb.metrics.msgs_total, rel=1e-6)
+
+
+class TestPaperTrends:
+    def test_fig2_dense_format_weight_sparsity_no_runtime_gain(self):
+        prof = loihi2_like()
+        xs = small_inputs()
+        times, energies = [], []
+        for wd in (1.0, 0.5, 0.1):
+            net = programmed_fc_network([256] * 4, weight_densities=[wd] * 3,
+                                        act_densities=[0.5] * 3, seed=0,
+                                        weight_format="dense")
+            r = simulate(net, xs, prof)
+            times.append(r.time_per_step)
+            energies.append(r.energy_per_step)
+        assert times[0] == pytest.approx(times[-1], rel=1e-6)   # no time gain
+        assert energies[0] > energies[-1]                       # small energy gain
+
+    def test_fig3_sparse_format_weight_sparsity_linear_gain(self):
+        prof = loihi2_like()
+        xs = small_inputs()
+        times = []
+        for wd in (1.0, 0.5, 0.25):
+            net = programmed_fc_network([256] * 4, weight_densities=[wd] * 3,
+                                        act_densities=[0.5] * 3, seed=0,
+                                        weight_format="sparse")
+            times.append(simulate(net, xs, prof).time_per_step)
+        assert times[0] > times[1] > times[2]
+        # roughly linear: halving density should cut the synop-dominated time
+        assert times[1] / times[0] < 0.75
+
+    def test_fig4_format_crossover(self):
+        """Sparse format loses at high weight density, wins at low."""
+        prof = loihi2_like()
+        xs = small_inputs()
+
+        def t(fmt, wd):
+            net = programmed_fc_network([256] * 4, weight_densities=[wd] * 3,
+                                        act_densities=[0.5] * 3, seed=0,
+                                        weight_format=fmt)
+            return simulate(net, xs, prof).time_per_step
+
+        assert t("sparse", 1.0) > t("dense", 1.0)    # dense wins when dense
+        assert t("sparse", 0.2) < t("dense", 0.2)    # sparse wins when sparse
+
+    def test_fig5_m0_imbalance_breaks_total_sparsity_proxy(self):
+        """Same total activation density, different schedules => different
+        performance; the imbalanced one is slower."""
+        prof = loihi2_like()
+        xs = small_inputs()
+        uni = programmed_fc_network([256] * 5, weight_densities=[1.0] * 4,
+                                    act_densities=[0.5] * 4, seed=0)
+        lohi = programmed_fc_network([256] * 5, weight_densities=[1.0] * 4,
+                                     act_densities=[0.9, 0.1, 0.9, 0.1], seed=0)
+        r_uni = simulate(uni, xs, prof)
+        r_lohi = simulate(lohi, xs, prof)
+        assert r_lohi.time_per_step > r_uni.time_per_step
+        assert proxy_gap(r_lohi.metrics) > proxy_gap(r_uni.metrics)
+
+    def test_fig6_time_linear_in_max_synops(self):
+        """Across schedules, time correlates with max per-core synops."""
+        prof = loihi2_like()
+        xs = small_inputs()
+        pts = []
+        for ad in ([0.8] * 4, [0.5] * 4, [0.2] * 4, [0.9, 0.1, 0.9, 0.1],
+                   [0.1, 0.9, 0.1, 0.9], [0.7, 0.5, 0.3, 0.1]):
+            net = programmed_fc_network([256] * 5, weight_densities=[1.0] * 4,
+                                        act_densities=list(ad), seed=0)
+            r = simulate(net, xs, prof)
+            pts.append((r.max_synops, r.time_per_step))
+        pts.sort()
+        xs_, ts = np.array(pts).T
+        corr = np.corrcoef(xs_, ts)[0, 1]
+        assert corr > 0.98
+
+    def test_fig7_partitioning_lowers_compute_floor_raises_energy(self):
+        prof = loihi2_like()
+        net = programmed_fc_network([256] * 4, weight_densities=[0.05] * 3,
+                                    act_densities=[0.05] * 3, seed=0,
+                                    weight_format="sparse")
+        xs = make_inputs(256, 0.05, 3, seed=1)
+        r1 = simulate(net, xs, prof, Partition((1, 1, 1)))
+        r4 = simulate(net, xs, prof, Partition((4, 4, 4)))
+        assert r4.time_per_step < r1.time_per_step          # floor lowered
+        assert r4.energy_per_step > r1.energy_per_step      # power rose
+
+    def test_fig8_strided_beats_ordered_under_high_utilization(self):
+        prof = loihi2_like()
+        net = programmed_fc_network([512] * 5, weight_densities=[0.4] * 4,
+                                    act_densities=[0.9, 0.1, 0.9, 0.1], seed=0,
+                                    weight_format="sparse")
+        xs = make_inputs(512, 0.5, 3, seed=1)
+        part = Partition((24, 24, 24, 24))
+        r_ord = simulate(net, xs, prof, part, ordered_mapping(part, prof))
+        r_str = simulate(net, xs, prof, part, strided_mapping(part, prof))
+        assert r_str.max_link_load < r_ord.max_link_load    # less congestion
+
+
+class TestPlatforms:
+    def test_speck_rejects_partitioning(self):
+        prof = speck_like()
+        net = fc_network([64, 64], seed=0)
+        assert not validate_partition(net, Partition((2,)), prof)
+
+    def test_speck_async_energy_tracks_activity(self):
+        prof = speck_like()
+        net = fc_network([128, 128, 10], neuron_model="if", seed=0)
+        for l in net.layers:
+            l.threshold = 0.5
+        lo = simulate(net, make_inputs(128, 0.05, 3, seed=2), prof)
+        hi = simulate(net, make_inputs(128, 0.6, 3, seed=2), prof)
+        assert lo.energy_per_step < hi.energy_per_step
+        assert lo.time_per_step < hi.time_per_step
+
+    def test_akd1000_dense_default(self):
+        prof = akd1000_like()
+        assert prof.default_format_fc == "dense"
+
+    def test_minimal_partition_respects_capacity(self):
+        prof = loihi2_like()
+        net = fc_network([2048, 2048], seed=0)
+        part = minimal_partition(net, prof)
+        assert validate_partition(net, part, prof)
+        # 2048*2048 weights / 64K per core => >= 64 cores
+        assert part.cores[0] >= 64
+
+
+class TestNeuronModels:
+    def test_if_neuron_spikes_and_resets(self):
+        w = np.eye(4, dtype=np.float32)
+        layer = SimLayer(name="if0", kind="fc", weights=w, neuron_model="if",
+                         threshold=1.0)
+        st_ = layer.init_state()
+        y1, st_, _, _ = layer.step(np.full(4, 0.6, np.float32), st_, None)
+        assert y1.sum() == 0                     # below threshold
+        y2, st_, _, _ = layer.step(np.full(4, 0.6, np.float32), st_, None)
+        assert y2.sum() == 4                     # crossed threshold
+        assert np.all(st_["v"] < 1.0)            # reset happened
+
+    def test_sigma_delta_sends_only_changes(self):
+        w = np.eye(3, dtype=np.float32)
+        layer = SimLayer(name="sd0", kind="fc", weights=w,
+                         neuron_model="sd_relu", threshold=0.01,
+                         sends_deltas=True)
+        st_ = layer.init_state()
+        x = np.array([1.0, 2.0, 3.0], np.float32)
+        y1, st_, c1, _ = layer.step(x, st_, None)
+        assert c1.msgs_out.sum() == 3            # first frame: all change
+        # identical input again, but as a *delta* stream the input is 0
+        y2, st_, c2, _ = layer.step(np.zeros(3, np.float32), st_,
+                                    np.asarray(x))
+        assert c2.msgs_out.sum() == 0            # nothing changed
+
+    def test_sigma_delta_reconstruction(self):
+        """Accumulated sigma-delta messages reconstruct ReLU output within
+        threshold quantization error."""
+        rng = np.random.default_rng(0)
+        w = rng.normal(size=(8, 8)).astype(np.float32)
+        layer = SimLayer(name="sd", kind="fc", weights=w,
+                         neuron_model="sd_relu", threshold=0.05,
+                         sends_deltas=True)
+        st_ = layer.init_state()
+        acc = np.zeros(8, np.float32)
+        x = rng.normal(size=(8,)).astype(np.float32)
+        msgs = []
+        for t in range(5):   # constant input: only the first step messages
+            y, st_, c, _ = layer.step(x, st_, None)
+            acc += y
+            msgs.append(c.msgs_out.sum())
+        target = np.maximum(x @ w, 0.0)
+        np.testing.assert_allclose(acc, target, atol=0.06)
+        assert sum(msgs[1:]) == 0    # steady input -> no further deltas
+
+
+def test_report_fields_finite():
+    prof = loihi2_like()
+    net = fc_network([64, 32], seed=0)
+    r = simulate(net, small_inputs(64, steps=2), prof)
+    assert np.isfinite(r.time_per_step) and r.time_per_step > 0
+    assert np.isfinite(r.energy_per_step) and r.energy_per_step > 0
+    assert r.outputs.shape == (2, 32)
+    assert r.bottleneck_stage in ("memory", "compute", "traffic", "barrier")

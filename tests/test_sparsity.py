@@ -1,0 +1,71 @@
+"""Stage-1 sparsity modules: Tl1, synops loss, pruning, sigma-delta
+calibration (+ hypothesis property tests)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro import sparsity as sp
+from repro.sparsity.sigma_delta import delta_sparsity, sigma_delta_messages
+
+
+def test_tl1_decreases_with_sparsity():
+    dense = [jnp.ones((100,))]
+    sparse = [jnp.concatenate([jnp.ones((10,)), jnp.zeros((90,))])]
+    assert float(sp.tl1_regularizer(sparse)) < \
+        float(sp.tl1_regularizer(dense))
+
+
+def test_tl1_gradient_drives_down():
+    x = jnp.asarray(np.random.default_rng(0).uniform(0.1, 1.0, 64),
+                    jnp.float32)
+    g = jax.grad(lambda a: sp.tl1_regularizer([a]))(x)
+    assert np.all(np.asarray(g) > 0)       # positive acts pushed to zero
+
+
+@given(st.floats(0.1, 0.9))
+@settings(max_examples=10, deadline=None)
+def test_prune_masks_hit_target(s):
+    params = {"w": jnp.asarray(
+        np.random.default_rng(1).standard_normal((64, 64)), jnp.float32)}
+    masks = sp.magnitude_prune_masks(params, s)
+    got = 1.0 - float(jnp.mean(masks["w"]))
+    assert abs(got - s) < 0.02
+
+
+def test_prune_keeps_largest():
+    w = jnp.asarray([[0.01, 5.0] * 32] * 64, jnp.float32)
+    masks = sp.magnitude_prune_masks({"w": w}, 0.5)
+    assert float(jnp.sum(masks["w"][:, 1::2])) == 64 * 32   # big kept
+
+
+def test_synops_loss_weighs_fanout():
+    acts = [jnp.ones((10,)), jnp.ones((10,))]
+    hi = sp.synops_loss(acts, [1000, 1])
+    acts2 = [jnp.zeros((10,)), jnp.ones((10,))]   # silence the big-fanout
+    lo = sp.synops_loss(acts2, [1000, 1])
+    assert float(lo) < float(hi)
+
+
+@given(st.floats(0.2, 0.95))
+@settings(max_examples=10, deadline=None)
+def test_sigma_delta_calibration(target):
+    rng = np.random.default_rng(3)
+    deltas = [rng.standard_normal(5000), rng.standard_normal(5000) * 0.1]
+    thetas = sp.calibrate_thresholds(deltas, float(target))
+    for d, t in zip(deltas, thetas):
+        got = delta_sparsity(d, t)
+        assert got >= target - 0.02
+        assert got <= target + 0.05
+
+
+def test_sigma_delta_reconstruction_bounded():
+    rng = np.random.default_rng(4)
+    theta = 0.2
+    ref = np.zeros(32)
+    acts = np.zeros(32)
+    for _ in range(20):
+        acts = acts + rng.standard_normal(32) * 0.3
+        q, ref = sigma_delta_messages(acts, ref, theta)
+    assert np.max(np.abs(ref - acts)) <= theta + 1e-9

@@ -1,0 +1,99 @@
+"""TPU floorline: hlo_cost trip-count analyzer, three-term model,
+bottleneck classification, hillclimb accept/backtrack semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hlo_cost, tpu_floorline as tfl
+from repro.core.analytical import Bottleneck
+from repro.distributed.autoshard import HillResult, Move, hillclimb
+
+
+def _compiled(M, R):
+    def step(x, w):
+        def layer(c, _):
+            return jnp.tanh(c @ w), None
+
+        def mb(c, xi):
+            y, _ = jax.lax.scan(layer, xi, None, length=R)
+            return c + jnp.sum(y), None
+        s, _ = jax.lax.scan(mb, 0.0, x)
+        return s
+    x = jax.ShapeDtypeStruct((M, 64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    return jax.jit(step).lower(x, w).compile()
+
+
+def test_hlo_cost_scan_trip_counts():
+    for M, R in [(1, 1), (2, 3), (4, 4)]:
+        c = hlo_cost.analyze(_compiled(M, R).as_text())
+        assert c.flops == M * R * 2 * 64 ** 3, (M, R, c.flops)
+
+
+def test_xla_cost_analysis_undercounts_scans():
+    """The reason hlo_cost exists: XLA counts while bodies once."""
+    ca = _compiled(4, 4).cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    assert ca["flops"] < 2 * 2 * 64 ** 3          # ~1 matmul, not 16
+
+
+def test_roofline_terms_dominance():
+    t = tfl.RooflineTerms(flops_per_chip=197e12, hbm_bytes_per_chip=819e9,
+                          collective_bytes_per_chip=0, model_flops=1.0,
+                          n_chips=1)
+    assert abs(t.t_compute - 1.0) < 1e-9
+    assert abs(t.t_memory - 1.0) < 1e-9
+    t2 = tfl.RooflineTerms(1e12, 819e9 * 5, 0, model_flops=1.0)
+    assert t2.dominant == Bottleneck.MEMORY
+    t3 = tfl.RooflineTerms(1e12, 1e9, 50e9 * 100, model_flops=1.0)
+    assert t3.dominant == Bottleneck.TRAFFIC
+    assert "collective" in t3.recommendation()
+
+
+def test_model_flops_rules():
+    from repro.configs import registry
+    cfg = registry.get("kimi-k2-1t-a32b").config
+    mf_train = tfl.model_flops_for(cfg, "train", 4096, 256)
+    # MoE: active params only
+    assert mf_train == 6.0 * cfg.active_param_count() * 4096 * 256
+    mf_dec = tfl.model_flops_for(cfg, "decode", 32768, 128)
+    assert mf_dec == 2.0 * cfg.active_param_count() * 128
+
+
+def test_hillclimb_accepts_and_backtracks():
+    calls = []
+
+    def evaluate(**kw):
+        calls.append(kw)
+        bound = 10.0
+        if kw.get("good"):
+            bound -= 4.0
+        if kw.get("bad"):
+            bound += 1.0
+        return {"bound_s": bound, "t_compute_s": 1, "t_memory_s": bound,
+                "t_collective_s": 0.1, "dominant": "memory"}
+
+    moves = [
+        Move("bad-move", "should regress", Bottleneck.MEMORY, {"bad": True}),
+        Move("good-move", "should help", Bottleneck.MEMORY, {"good": True}),
+    ]
+    res = hillclimb(evaluate, moves)
+    assert isinstance(res, HillResult)
+    assert res.best["bound_s"] == 6.0
+    assert res.best_overrides == {"good": True}      # bad move backtracked
+    accepted = [s for s in res.log if s.accepted]
+    assert len(accepted) == 1 and accepted[0].move == "good-move"
+    assert "| good-move |" in res.markdown()
+
+
+def test_parse_collectives_fallback_regex():
+    text = """
+  %all-gather.5 = bf16[4,32,16,64]{3,2,1,0} all-gather(bf16[4,2,16,64]{3,2,1,0} %p), replica_groups=[16,16]<=[256], dimensions={1}
+  %all-reduce.1 = f32[128]{0} all-reduce(f32[128]{0} %q), replica_groups={}
+"""
+    st = tfl.parse_collectives(text)
+    assert st.count_by_kind == {"all-gather": 1, "all-reduce": 1}
+    assert st.bytes_by_kind["all-gather"] == 4 * 2 * 16 * 64 * 2
+    assert st.bytes_by_kind["all-reduce"] == 128 * 4
