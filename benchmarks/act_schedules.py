@@ -18,7 +18,8 @@ SIZES = (64, 192, 192, 192, 64)
 
 
 def run(quick: bool = False) -> dict:
-    steps = 3 if quick else 5
+    # batched engine: longer windows are ~free -> tighter per-config means
+    steps = 3 if quick else 10
     rows = []
     for sched in SCHEDULES:
         for tot in TOTALS:

@@ -14,7 +14,8 @@ SIZES = (64, 192, 192, 192, 64)
 
 
 def collect_points(quick: bool = False):
-    steps = 3 if quick else 5
+    # batched engine: longer windows are ~free -> tighter floorline fits
+    steps = 3 if quick else 10
     pts = []
     for sched in ("uniform", "lohi", "increasing", "decreasing"):
         for tot in (0.8, 0.5, 0.2, 0.05):

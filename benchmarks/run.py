@@ -12,14 +12,23 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--engine", default=None,
+                    choices=("batched", "reference"),
+                    help="simulator engine for every experiment "
+                         "(default: layer-major batched)")
     args = ap.parse_args(argv)
 
+    if args.engine:
+        from repro.neuromorphic import timestep
+        timestep.DEFAULT_ENGINE = args.engine
+
     from benchmarks import (act_schedules, compute_floor, max_synops,
-                            stage1_sparsity, stage2_partitioning,
+                            sim_speed, stage1_sparsity, stage2_partitioning,
                             tpu_roofline, traffic_mapping, weight_format,
                             weight_sparsity)
 
     mods = [
+        ("sim_speed", sim_speed),
         ("fig2_3_weight_sparsity", weight_sparsity),
         ("fig4_weight_format", weight_format),
         ("fig5_act_schedules", act_schedules),

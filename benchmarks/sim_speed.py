@@ -1,0 +1,78 @@
+"""Simulator-engine microbenchmark: step-major reference vs layer-major
+batched execution on fixed fc and conv workloads.
+
+Writes ``BENCH_sim.json`` (steps/sec per engine + speedup) at the repo
+root.  The fc workload is the acceptance gate for the layer-major engine
+(>= 10x steps/sec); the equivalence suite
+(``tests/test_sim_equivalence.py``) proves the two engines agree exactly,
+so the speedup is free.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks import workloads as W
+from repro.neuromorphic import fc_network, loihi2_like, make_inputs
+from repro.neuromorphic.timestep import simulate
+
+BENCH_PATH = "BENCH_sim.json"
+
+
+def _time_engine(net, xs, prof, engine: str, repeats: int = 3) -> float:
+    """Best-of-N wall-clock for one simulate() call, in seconds."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        simulate(net, xs, prof, engine=engine)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _bench(name: str, net, xs, prof, repeats: int) -> dict:
+    simulate(net, xs, prof, engine="batched")      # warm jit/caches
+    T = xs.shape[0]
+    t_ref = _time_engine(net, xs, prof, "reference", repeats)
+    t_bat = _time_engine(net, xs, prof, "batched", repeats)
+    row = {
+        "workload": name,
+        "steps": T,
+        "ref_steps_per_sec": T / t_ref,
+        "batched_steps_per_sec": T / t_bat,
+        "speedup": t_ref / t_bat,
+    }
+    return row
+
+
+def run(quick: bool = False) -> dict:
+    steps = 64 if quick else 256
+    repeats = 2 if quick else 3
+
+    fc = fc_network([128, 256, 256, 256, 128, 64], weight_density=0.5,
+                    seed=0)
+    fc_xs = make_inputs(128, 0.5, steps, seed=1)
+
+    conv, conv_prof = W.akidanet_sim(weight_density=0.6, seed=0)
+    conv_xs = W.sim_inputs(conv, 0.5, max(steps // 4, 16), seed=1)
+
+    out = {
+        "fc": _bench("fc", fc, fc_xs, loihi2_like(), repeats),
+        "conv": _bench("conv", conv, conv_xs, conv_prof, repeats),
+    }
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def report(res: dict) -> str:
+    lines = ["## sim_speed — step-major vs layer-major engine"]
+    for name in ("fc", "conv"):
+        r = res[name]
+        lines.append(
+            f"  {name:5s} T={r['steps']:<4d} "
+            f"ref={r['ref_steps_per_sec']:8.1f} steps/s  "
+            f"batched={r['batched_steps_per_sec']:10.1f} steps/s  "
+            f"-> {r['speedup']:.1f}x")
+    lines.append(f"  wrote {BENCH_PATH}")
+    return "\n".join(lines)

@@ -16,8 +16,15 @@ from repro.train.data import SyntheticDenoise
 
 
 def _optimize(net, prof, xs):
+    # the functional run is partition/mapping independent: compute the
+    # layer-major counters once and re-price every candidate from them
+    # (only the batched engine consumes the cache)
+    from repro.neuromorphic import timestep
+    pre = (net.run_batch(xs) if timestep.DEFAULT_ENGINE == "batched"
+           else None)
+
     def evaluate(part, mapping):
-        return simulate(net, xs, prof, part, mapping)
+        return simulate(net, xs, prof, part, mapping, precomputed=pre)
     return optimize_partitioning(net, prof, evaluate)
 
 

@@ -51,10 +51,11 @@ def compressed_psum_mean(x: jax.Array, err: jax.Array, axis_names):
     q2 = jnp.clip(jnp.round(xf / gmax), -127, 127).astype(jnp.int8)
     new_err = xf - q2.astype(jnp.float32) * gmax
     total = jax.lax.psum(q2.astype(jnp.int32), axis_names)
+    from repro.distributed.compat import axis_size
     n = 1
     for a in (axis_names if isinstance(axis_names, (tuple, list))
               else (axis_names,)):
-        n *= jax.lax.axis_size(a)
+        n *= axis_size(a)
     return total.astype(jnp.float32) * gmax / n, new_err
 
 

@@ -1,0 +1,37 @@
+"""JAX version-compatibility shims.
+
+The codebase targets the jax >= 0.6 public API (``jax.shard_map`` with a
+``check_vma`` argument); older runtimes only have
+``jax.experimental.shard_map.shard_map`` whose equivalent flag is named
+``check_rep``.  Import ``shard_map`` from here instead of from ``jax``.
+"""
+
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:                                            # jax >= 0.6 public API
+    _shard_map = jax.shard_map
+except AttributeError:                          # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_PARAMS = frozenset(inspect.signature(_shard_map).parameters)
+
+
+def shard_map(f, **kw):
+    """``jax.shard_map`` with ``check_vma`` translated for older runtimes."""
+    if "check_vma" in kw and "check_vma" not in _PARAMS:
+        if "check_rep" in _PARAMS:
+            kw["check_rep"] = kw.pop("check_vma")
+        else:
+            kw.pop("check_vma")
+    return _shard_map(f, **kw)
+
+
+def axis_size(axis_name):
+    """``jax.lax.axis_size`` with a psum(1) fallback for older runtimes."""
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)

@@ -20,7 +20,12 @@ def _pad_to(a: jax.Array, mult: tuple[int, ...]) -> jax.Array:
 
 def block_activity(x: jax.Array, threshold: float, bm: int = 128,
                    bk: int = 128) -> jax.Array:
-    """(Mb, Kb) bool activity map (pads x up to tile multiples)."""
+    """(Mb, Kb) bool activity map.
+
+    Accepts either raw or already tile-aligned ``x``: ``_pad_to`` is a no-op
+    on aligned inputs, so callers that pad for the kernel share one pad with
+    this helper instead of paying a second copy.
+    """
     x = _pad_to(x, (bm, bk))
     return block_activity_ref(x, threshold, bm, bk)
 
@@ -31,15 +36,24 @@ def _compact_indices(active: jax.Array) -> tuple[jax.Array, jax.Array]:
     Returns (idx (Mb, Kb) int32, cnt (Mb,) int32).  Padding entries repeat
     the last active index (or 0 when a row is fully inactive) so the kernel's
     index map revisits an already-resident tile instead of DMA'ing a new one.
+
+    Stable cumsum compaction: each active column's destination slot is its
+    running count minus one (O(Mb*Kb) scatter instead of an O(Kb log Kb)
+    per-row argsort).
     """
     mb, kb = active.shape
-    order = jnp.argsort(~active, axis=1, stable=True)     # actives first
-    cnt = active.sum(axis=1).astype(jnp.int32)
+    cum = jnp.cumsum(active, axis=1)
+    cnt = cum[:, -1].astype(jnp.int32)
+    # inactive columns scatter into an overflow slot that is sliced away
+    dest = jnp.where(active, cum - 1, kb)
+    rows = jnp.broadcast_to(jnp.arange(mb)[:, None], (mb, kb))
+    cols = jnp.broadcast_to(jnp.arange(kb)[None, :], (mb, kb))
+    idx = (jnp.zeros((mb, kb + 1), jnp.int32)
+           .at[rows, dest].set(cols.astype(jnp.int32))[:, :kb])
     pos = jnp.arange(kb)[None, :]
-    last = jnp.maximum(cnt - 1, 0)[:, None]
-    idx = jnp.where(pos < cnt[:, None], order,
-                    jnp.take_along_axis(order, last, axis=1))
-    return idx.astype(jnp.int32), cnt
+    last = jnp.take_along_axis(idx, jnp.maximum(cnt - 1, 0)[:, None], axis=1)
+    idx = jnp.where(pos < cnt[:, None], idx, last)
+    return idx, cnt
 
 
 @functools.partial(jax.jit, static_argnames=("threshold", "bm", "bk", "bn",
@@ -73,7 +87,7 @@ def event_matmul(x: jax.Array, w: jax.Array, *, threshold: float = 0.0,
         raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
     xp = _pad_to(x, (bm, bk))
     wp = _pad_to(w, (bk, bn))
-    active = block_activity_ref(xp, threshold, bm, bk)
+    active = block_activity(xp, threshold, bm, bk)   # xp aligned: no re-pad
     idx, cnt = _compact_indices(active)
     out = event_matmul_pallas(xp, wp, idx, cnt, bm=bm, bk=bk, bn=bn,
                               out_dtype=x.dtype, interpret=interpret)

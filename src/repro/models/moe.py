@@ -37,10 +37,7 @@ from jax.sharding import PartitionSpec as P
 from repro.models.common import MoECfg, ModelCfg
 from repro.models.layers import ACTS, KeyGen, ShardCtx, _init
 
-try:                                            # jax >= 0.6 public API
-    shard_map = jax.shard_map
-except AttributeError:                          # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.distributed.compat import shard_map
 
 
 def moe_params(kg: KeyGen, cfg: ModelCfg, m: MoECfg, dtype) -> dict:

@@ -11,16 +11,19 @@ reporting).
 
 from repro.neuromorphic.platform import (ChipProfile, akd1000_like, loihi2_like,
                                          speck_like)
-from repro.neuromorphic.network import (SimLayer, SimNetwork, fc_network,
-                                        make_inputs, programmed_fc_network)
+from repro.neuromorphic.network import (BatchCounters, SimLayer, SimNetwork,
+                                        fc_network, make_inputs,
+                                        programmed_fc_network)
 from repro.neuromorphic.partition import Partition, minimal_partition
-from repro.neuromorphic.noc import Mapping, ordered_mapping, strided_mapping
+from repro.neuromorphic.noc import (Mapping, ordered_mapping, route_batch,
+                                    strided_mapping)
 from repro.neuromorphic.timestep import SimReport, simulate
 
 __all__ = [
     "ChipProfile", "akd1000_like", "loihi2_like", "speck_like",
-    "SimLayer", "SimNetwork", "fc_network", "make_inputs", "programmed_fc_network",
+    "BatchCounters", "SimLayer", "SimNetwork", "fc_network", "make_inputs",
+    "programmed_fc_network",
     "Partition", "minimal_partition",
-    "Mapping", "ordered_mapping", "strided_mapping",
+    "Mapping", "ordered_mapping", "route_batch", "strided_mapping",
     "SimReport", "simulate",
 ]

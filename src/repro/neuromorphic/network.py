@@ -6,14 +6,30 @@ ReLU / SSM state), optional message gate (used to *program* exact activation
 sparsity, as the paper does in §V-A by "explicitly toggling neuron activation
 messaging on and off"), and weight format (dense/sparse, Fig. 4).
 
-``step`` executes one timestep functionally (exact values) and returns exact
-event-counter maps per neuron; the cost model in :mod:`repro.neuromorphic.
-timestep` turns those into per-core times and energies.
+Two execution engines produce identical event counts:
+
+* **step-major** (``step`` / ``run``): one timestep at a time, layer by
+  layer — the reference implementation, kept for parity checking.
+* **layer-major, time-batched** (``step_batch`` / ``run_batch``): for each
+  layer in order, the full ``(T, n_in)`` message matrix is consumed at once.
+  This is *exact* for feed-forward stacks because within a timestep messages
+  flow strictly downstream (layer ``l`` at step ``t`` sees only layer
+  ``l-1``'s step-``t`` output), so the time axis of a stateless layer is
+  embarrassingly parallel: ReLU layers become a single GEMM and conv layers
+  a single batched ``conv_general_dilated`` with batch = T.  Stateful
+  neurons (IF / sigma-delta / SSM) carry state only *along* time within one
+  layer, so they reduce to a tight vectorized recurrence over T applied to
+  the whole ``(T, n)`` pre-activation block.  Sigma-delta input
+  reconstruction is a cumulative sum over the time axis.
+
+The cost model in :mod:`repro.neuromorphic.timestep` turns the exact counter
+maps of either engine into per-core times and energies.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -34,6 +50,29 @@ class CounterMaps:
     fetches_dense: np.ndarray      # dense-format weight fetches per neuron
     msgs_out: np.ndarray           # 0/1 message emitted per neuron
     acts_evented: np.ndarray       # 0/1 neuron received >= 1 synop
+
+
+@dataclasses.dataclass
+class BatchCounters:
+    """Exact event counts for one layer over ALL timesteps (time-major).
+
+    The layer-major engine's counterpart of :class:`CounterMaps`: per-neuron
+    maps are ``(T, n_neurons)`` arrays in the same partition order, so one
+    segment-sum per layer aggregates every timestep at once.
+    """
+
+    msgs_in: np.ndarray            # (T,) input messages per step
+    macs: np.ndarray               # (T, n) nnz multiply-accumulates
+    fetches_dense: np.ndarray      # (T, n) dense-format weight fetches
+    msgs_out: np.ndarray           # (T, n) 0/1 message emitted
+    acts_evented: np.ndarray       # (T, n) 0/1 neuron received >= 1 synop
+
+    def step_view(self, t: int) -> CounterMaps:
+        """Per-step view, for parity checks against the step-major engine."""
+        return CounterMaps(
+            msgs_in=float(self.msgs_in[t]), macs=self.macs[t],
+            fetches_dense=self.fetches_dense[t], msgs_out=self.msgs_out[t],
+            acts_evented=self.acts_evented[t])
 
 
 @dataclasses.dataclass
@@ -90,6 +129,26 @@ class SimLayer:
         per = -(-cout // n_cores)
         return int(kh * kw * cin * per)
 
+    # --------------------------------------------- cached derived weight data
+    # Weights are set at construction and treated as immutable afterwards;
+    # anything derived from them is computed once per layer, not per step.
+
+    @functools.cached_property
+    def w_mask(self) -> np.ndarray:
+        """0/1 mask of nonzero weights (fc MAC counting)."""
+        return (self.weights != 0).astype(np.float32)
+
+    @functools.cached_property
+    def w_nnz(self) -> int:
+        """Number of nonzero synaptic weights."""
+        return int((self.weights != 0).sum())
+
+    @functools.cached_property
+    def _conv_kernels(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+        """Device-resident conv kernels: (weights, nnz mask, all-ones)."""
+        wj = jnp.asarray(self.weights)
+        return wj, (wj != 0).astype(jnp.float32), jnp.ones_like(wj)
+
     def init_state(self) -> dict[str, np.ndarray]:
         n = self.n_neurons
         st: dict[str, Any] = {}
@@ -99,8 +158,6 @@ class SimLayer:
             st["y_sent"] = np.zeros(n, np.float32)
         elif self.neuron_model == "ssm":
             st["x"] = np.zeros(n, np.float32)
-        if self.sends_deltas or self.neuron_model == "sd_relu":
-            pass
         return st
 
     # ------------------------------------------------------------------ step
@@ -126,8 +183,7 @@ class SimLayer:
 
         if self.kind == "fc":
             pre = x_eff @ self.weights
-            w_mask = (self.weights != 0).astype(np.float32)
-            macs = act_mask @ w_mask
+            macs = act_mask @ self.w_mask
             fetches_dense = np.full(self.n_neurons, msgs_in, np.float32)
         else:
             pre, macs, fetches_dense = self._conv_forward(x_eff, act_mask)
@@ -148,6 +204,71 @@ class SimLayer:
             acts_evented=(np.asarray(macs).reshape(-1) > 0).astype(np.float32),
         )
         return y_msgs, state, counters, in_acc
+
+    # ------------------------------------------------------- batched step
+    def step_batch(self, x_in: np.ndarray, state: dict[str, np.ndarray],
+                   in_acc: np.ndarray | None
+                   ) -> tuple[np.ndarray, dict, BatchCounters,
+                              np.ndarray | None]:
+        """All T timesteps at once: consume the full ``(T, n_in)`` message
+        matrix, produce ``(T, n)`` output messages, and count events exactly.
+
+        Equivalent to T calls of :meth:`step`: the input-side delta
+        reconstruction is a cumulative sum over time, the synaptic forward is
+        one GEMM / one batched conv, and neuron state advances in a
+        vectorized recurrence over T.  Counters and neuron recurrences use
+        the same float op order as the step-major path (bit-identical); the
+        delta accumulator matches bit for bit when it starts at zero, which
+        :meth:`SimNetwork.init_accs` guarantees for every run — a caller
+        chaining ``step_batch`` from a *nonzero* accumulator gets
+        ``acc + cumsum(x)``, equal to the step-major chain only to within
+        float32 rounding.
+        """
+        x_in = np.asarray(x_in, np.float32)
+        if x_in.ndim != 2:
+            raise ValueError(f"step_batch needs (T, n_in), got {x_in.shape}")
+        if in_acc is not None:
+            # delta reconstruction: acc_t = acc_0 + sum_{k<=t} x_k.  accs
+            # start at zero for every run, where np.cumsum (sequential
+            # np.add.accumulate) matches the step-major addition order bit
+            # for bit.
+            if np.any(in_acc):
+                x_eff = in_acc[None, :] + np.cumsum(x_in, axis=0)
+            else:
+                x_eff = np.cumsum(x_in, axis=0)
+            new_acc = x_eff[-1].copy()
+        else:
+            x_eff = x_in
+            new_acc = None
+
+        act_mask = (x_in != 0).astype(np.float32)   # events on the wire
+        msgs_in = act_mask.sum(axis=1)              # (T,)
+
+        if self.kind == "fc":
+            pre = x_eff @ self.weights
+            macs = act_mask @ self.w_mask
+            fetches_dense = np.broadcast_to(
+                msgs_in[:, None].astype(np.float32), macs.shape)
+        else:
+            pre, macs, fetches_dense = self._conv_forward_batch(x_eff,
+                                                                act_mask)
+
+        if self.bias is not None:
+            pre = pre + self.bias
+
+        y_msgs, state = self._neuron_batch(pre, state)
+        if self.msg_gate is not None:
+            y_msgs = y_msgs * self.msg_gate
+        msgs_out = (y_msgs != 0).astype(np.float32)
+
+        counters = BatchCounters(
+            msgs_in=msgs_in.astype(np.float64),
+            macs=np.asarray(macs, np.float32),
+            fetches_dense=np.asarray(fetches_dense, np.float32),
+            msgs_out=msgs_out,
+            acts_evented=(np.asarray(macs) > 0).astype(np.float32),
+        )
+        return y_msgs, state, counters, new_acc
 
     # ------------------------------------------------------------ neuron fns
     def _neuron(self, pre: np.ndarray, state: dict) -> tuple[np.ndarray, dict]:
@@ -177,6 +298,52 @@ class SimLayer:
             return y.astype(np.float32), state
         raise ValueError(f"unknown neuron model {self.neuron_model}")
 
+    def _neuron_batch(self, pre: np.ndarray,
+                      state: dict) -> tuple[np.ndarray, dict]:
+        """Neuron update over the whole (T, n) pre-activation block.
+
+        Stateless models vectorize fully; stateful models run a recurrence
+        over T with every per-step operation vectorized across the n neurons
+        (identical float op order to T sequential :meth:`_neuron` calls).
+        """
+        T = pre.shape[0]
+        if self.neuron_model == "relu":
+            y = np.maximum(pre, 0.0)
+            if self.force_active:
+                y = np.abs(pre) + 1.0
+            return y, state
+        if self.neuron_model == "if":
+            thr = max(self.threshold, 1e-6)
+            v = state["v"]
+            y = np.empty_like(pre)
+            for t in range(T):
+                v = v + pre[t]
+                spikes = (v >= thr).astype(np.float32)
+                v = v - thr * spikes
+                y[t] = spikes
+            return y, dict(state, v=v)
+        if self.neuron_model == "sd_relu":
+            relu = np.maximum(pre, 0.0)
+            thr = max(self.threshold, 1e-9)
+            y_sent = state["y_sent"]
+            y = np.empty_like(pre)
+            for t in range(T):
+                delta = relu[t] - y_sent
+                q = np.where(np.abs(delta) >= thr,
+                             np.round(delta / thr) * thr,
+                             0.0).astype(np.float32)
+                y_sent = y_sent + q
+                y[t] = q
+            return y, dict(state, y_sent=y_sent)
+        if self.neuron_model == "ssm":
+            x = state["x"]
+            y = np.empty_like(pre)
+            for t in range(T):
+                x = self.decay * x + pre[t]
+                y[t] = np.abs(x) + 1.0 if self.force_active else x
+            return y, dict(state, x=x)
+        raise ValueError(f"unknown neuron model {self.neuron_model}")
+
     # ------------------------------------------------------------- conv math
     def _conv_forward(self, x_eff: np.ndarray, act_mask: np.ndarray):
         """SAME-padded strided conv + exact MAC / dense-fetch counting.
@@ -191,15 +358,9 @@ class SimLayer:
         to_hwc = lambda a: np.transpose(a.reshape(cin, h, w), (1, 2, 0))
         x4 = jnp.asarray(to_hwc(x_eff)[None])
         m4 = jnp.asarray(to_hwc(act_mask)[None])
-        wj = jnp.asarray(self.weights)
-        wmask = (wj != 0).astype(jnp.float32)
-        wones = jnp.ones_like(wj)
+        wj, wmask, wones = self._conv_kernels
 
-        def conv(lhs, rhs):
-            return jax.lax.conv_general_dilated(
-                lhs, rhs, window_strides=(self.stride, self.stride),
-                padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
-
+        conv = self._conv_op
         pre = np.asarray(conv(x4, wj))[0]                  # (oh, ow, cout)
         macs = np.asarray(conv(m4, wmask))[0]
         fetches = np.asarray(conv(m4, wones))[0]
@@ -207,6 +368,31 @@ class SimLayer:
         to_flat = lambda a: np.transpose(a, (2, 0, 1)).reshape(-1)
         pre_flat = to_flat(pre)
         return pre_flat, to_flat(macs), to_flat(fetches)
+
+    def _conv_op(self, lhs, rhs):
+        return jax.lax.conv_general_dilated(
+            lhs, rhs, window_strides=(self.stride, self.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+    def _conv_forward_batch(self, x_eff: np.ndarray, act_mask: np.ndarray):
+        """All-timesteps conv: one ``conv_general_dilated`` with batch = T
+        per (values, mask, ones) kernel instead of T host->device round
+        trips.  Returns (T, n_neurons) channel-major maps."""
+        T = x_eff.shape[0]
+        h, w = self.in_hw
+        cin = self.weights.shape[2]
+        to_nhwc = lambda a: np.transpose(a.reshape(T, cin, h, w),
+                                         (0, 2, 3, 1))
+        x4 = jnp.asarray(to_nhwc(x_eff))
+        m4 = jnp.asarray(to_nhwc(act_mask))
+        wj, wmask, wones = self._conv_kernels
+
+        conv = self._conv_op
+        pre = np.asarray(conv(x4, wj))                     # (T, oh, ow, cout)
+        macs = np.asarray(conv(m4, wmask))
+        fetches = np.asarray(conv(m4, wones))
+        to_flat = lambda a: np.transpose(a, (0, 3, 1, 2)).reshape(T, -1)
+        return to_flat(pre), to_flat(macs), to_flat(fetches)
 
 
 @dataclasses.dataclass
@@ -245,7 +431,7 @@ class SimNetwork:
         return cur, new_states, new_accs, counters
 
     def run(self, xs: np.ndarray) -> tuple[np.ndarray, list[list[CounterMaps]]]:
-        """Run a (T, in_size)-shaped input sequence; return (T, out) outputs
+        """Step-major reference run: (T, in_size) inputs -> (T, out) outputs
         and per-timestep per-layer counters."""
         states, accs = self.init_states(), self.init_accs()
         outs, all_counters = [], []
@@ -254,6 +440,22 @@ class SimNetwork:
             outs.append(np.asarray(y).reshape(-1))
             all_counters.append(counters)
         return np.stack(outs), all_counters
+
+    def run_batch(self, xs: np.ndarray) -> tuple[np.ndarray,
+                                                 list[BatchCounters]]:
+        """Layer-major run: (T, in_size) inputs -> (T, out) outputs and one
+        :class:`BatchCounters` per layer.  Exactly equivalent to :meth:`run`
+        (see the module docstring) but visits each layer once with the full
+        time batch instead of T times."""
+        states, accs = self.init_states(), self.init_accs()
+        cur = np.asarray(xs, np.float32)
+        all_counters: list[BatchCounters] = []
+        for i, layer in enumerate(self.layers):
+            cur, states[i], cnt, accs[i] = layer.step_batch(
+                cur, states[i], accs[i])
+            all_counters.append(cnt)
+        T = xs.shape[0]
+        return np.asarray(cur).reshape(T, -1), all_counters
 
 
 # ====================================================================== builders
@@ -311,8 +513,16 @@ def programmed_fc_network(sizes: list[int], *, weight_densities: list[float],
 
 
 def make_inputs(n: int, density: float, steps: int, seed: int = 0) -> np.ndarray:
-    """(steps, n) inputs with exact per-step message density."""
+    """(steps, n) inputs with exact per-step message density.
+
+    One batched draw: values come from a single (steps, n) normal sample and
+    the per-step masks from one row-wise argsort of uniform noise (each row
+    keeps exactly ``round(density * n)`` ones, uniformly placed)."""
     rng = np.random.default_rng(seed)
-    return np.stack([np.abs(rng.normal(1.0, 0.2, n)).astype(np.float32)
-                     * _exact_density_mask((n,), density, rng)
-                     for _ in range(steps)])
+    vals = np.abs(rng.normal(1.0, 0.2, (steps, n))).astype(np.float32)
+    k = int(round(density * n))
+    mask = np.zeros((steps, n), np.float32)
+    if k > 0:
+        order = rng.random((steps, n)).argsort(axis=1)
+        np.put_along_axis(mask, order[:, :k], 1.0, axis=1)
+    return vals * mask

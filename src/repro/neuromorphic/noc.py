@@ -126,6 +126,71 @@ class NocTraffic:
         return float(self.router_loads.max(initial=0.0))
 
 
+@dataclasses.dataclass
+class NocTrafficBatch:
+    """Routed traffic for ALL timesteps at once (time-major)."""
+
+    router_loads: np.ndarray      # (T, R) packets touching each router
+    total_hops: np.ndarray        # (T,) link traversals
+    inject_per_core: np.ndarray   # (T, n_logical) injected packets
+
+    @property
+    def max_router_load(self) -> np.ndarray:
+        """(T,) busiest-router load per step."""
+        return self.router_loads.max(axis=1, initial=0.0)
+
+
+@functools.lru_cache(maxsize=64)
+def _flow_matrix(cores: tuple[int, ...], phys: tuple[int, ...],
+                 grid: tuple[int, int],
+                 n_cores_phys: int) -> tuple[np.ndarray, np.ndarray]:
+    """Per-(partition, mapping) routing structure, independent of the
+    per-step message counts.
+
+    Returns ``(P, dup)`` where ``P`` is an (n_logical, R*R) matrix such that
+    ``msgs @ P`` is the flattened router->router flow tensor (entry
+    ``[core, src*R+dst]`` counts how many destination cores of the next
+    layer sit on router ``dst``), and ``dup`` is the per-core unicast
+    duplication factor (number of destination cores)."""
+    rows, cols = grid
+    R = rows * cols
+    cpr = max(1, n_cores_phys // R)
+    routers = np.asarray([p // cpr for p in phys])
+    n_logical = int(sum(cores))
+    P = np.zeros((n_logical, R * R), np.float64)
+    dup = np.zeros(n_logical, np.float64)
+    offsets = np.concatenate([[0], np.cumsum(cores)]).astype(int)
+    n_layers = len(cores)
+    for l in range(n_layers):
+        src_idx = np.arange(offsets[l], offsets[l + 1])
+        if l + 1 < n_layers:
+            dst_routers = routers[offsets[l + 1]:offsets[l + 2]]
+        else:
+            dst_routers = np.asarray([0])        # chip I/O port
+        dup[src_idx] = len(dst_routers)
+        for g in src_idx:
+            np.add.at(P[g], routers[g] * R + dst_routers, 1.0)
+    return P, dup
+
+
+def route_batch(part: Partition, mapping: Mapping, msgs_out: np.ndarray,
+                profile: ChipProfile) -> NocTrafficBatch:
+    """Route every timestep's messages at once.  ``msgs_out`` is the
+    (T, n_logical) per-core message-count matrix in logical core order; the
+    (T, R, R) flow tensor is one matmul against the cached per-core flow
+    incidence, and router loads / hop counts are one matmul each against the
+    cached path incidence.  Counts are integers in float64, so the results
+    are bit-identical to T :func:`route_step` calls."""
+    P, dup = _flow_matrix(part.cores, mapping.phys, profile.grid,
+                          profile.n_cores)
+    m = np.asarray(msgs_out, np.float64)
+    flow_flat = m @ P                                   # (T, R*R)
+    loads = flow_flat @ _path_incidence(profile.grid)   # (T, R)
+    hops = flow_flat @ _pair_hops(profile.grid)         # (T,)
+    return NocTrafficBatch(router_loads=loads, total_hops=hops,
+                           inject_per_core=m * dup)
+
+
 def route_step(part: Partition, mapping: Mapping,
                msgs_out_per_core: list[np.ndarray],
                profile: ChipProfile) -> NocTraffic:

@@ -11,6 +11,22 @@ congestion, plus barrier overhead.
 Asynchronous platforms (Speck) have no barrier: a sample's latency is the
 pipeline sum over layers of event-driven core work, and idle cores consume
 no active power.
+
+Two engines price a workload:
+
+* ``engine="batched"`` (default) — **layer-major, time-batched**: the
+  functional network runs once per layer over the whole ``(T, n)`` block
+  (:meth:`SimNetwork.run_batch`), counters are aggregated to cores with one
+  segment-sum per layer over the ``(T, n_neurons)`` maps, NoC routing is one
+  matmul against a cached flow incidence (:func:`route_batch`), and all
+  per-step bookkeeping (times, energies, stage votes, max-per-core stats)
+  is array ops over the time axis.  This is exact for feed-forward stacks:
+  messages cross a layer boundary only within a step, and neuron state flows
+  only along time *within* a layer, so reordering the (t, l) loop nest to
+  layer-major changes no value.
+* ``engine="reference"`` — the original step-major loop, kept so the batched
+  engine's outputs and counters can be checked for exact parity
+  (``tests/test_sim_equivalence.py``).
 """
 
 from __future__ import annotations
@@ -20,10 +36,14 @@ import dataclasses
 import numpy as np
 
 from repro.core.metrics import LoadStats, WorkloadMetrics
-from repro.neuromorphic.network import CounterMaps, SimNetwork
-from repro.neuromorphic.noc import Mapping, NocTraffic, ordered_mapping, route_step
+from repro.neuromorphic.network import BatchCounters, CounterMaps, SimNetwork
+from repro.neuromorphic.noc import (Mapping, NocTraffic, ordered_mapping,
+                                    route_batch, route_step)
 from repro.neuromorphic.partition import Partition, minimal_partition
 from repro.neuromorphic.platform import ChipProfile
+
+#: Engine used when ``simulate`` is called without an explicit ``engine``.
+DEFAULT_ENGINE = "batched"
 
 
 @dataclasses.dataclass
@@ -39,9 +59,44 @@ class CoreCounters:
     sparse_format: bool
 
 
+@dataclasses.dataclass
+class BatchCoreCounters:
+    """Per-core event counts for one layer over ALL timesteps (time-major:
+    every array is (T, cores) except ``neurons``)."""
+
+    msgs_in: np.ndarray        # (T, cores) input messages (broadcast)
+    synops: np.ndarray         # (T, cores)
+    macs: np.ndarray           # (T, cores)
+    acts: np.ndarray           # (T, cores)
+    msgs_out: np.ndarray       # (T, cores)
+    neurons: np.ndarray        # (cores,)
+    sparse_format: bool
+
+
 def _segment_sums(per_neuron: np.ndarray, bounds: np.ndarray) -> np.ndarray:
     csum = np.concatenate([[0.0], np.cumsum(per_neuron, dtype=np.float64)])
     return csum[bounds[1:]] - csum[bounds[:-1]]
+
+
+def _segment_sums_batch(per_neuron: np.ndarray,
+                        bounds: np.ndarray) -> np.ndarray:
+    """(T, n) -> (T, cores) segment sums in one vectorized pass per layer.
+
+    Same cumulative-sum difference as the per-step :func:`_segment_sums`
+    (bit-identical results, and — unlike ``np.add.reduceat`` — an empty
+    segment correctly sums to 0 when a partition holds more cores than the
+    layer has neurons)."""
+    a = np.asarray(per_neuron, np.float64)
+    csum = np.concatenate([np.zeros((a.shape[0], 1)),
+                           np.cumsum(a, axis=1)], axis=1)
+    return csum[:, bounds[1:]] - csum[:, bounds[:-1]]
+
+
+def _layer_format(layer, profile: ChipProfile) -> bool:
+    fmt = layer.weight_format or (
+        profile.default_format_conv if layer.kind == "conv"
+        else profile.default_format_fc)
+    return fmt == "sparse"
 
 
 def aggregate_layer(counters: CounterMaps, layer_idx: int, part: Partition,
@@ -49,10 +104,7 @@ def aggregate_layer(counters: CounterMaps, layer_idx: int, part: Partition,
     layer = net.layers[layer_idx]
     n = layer.n_neurons
     bounds = part.boundaries(layer_idx, n)
-    fmt = layer.weight_format or (
-        profile.default_format_conv if layer.kind == "conv"
-        else profile.default_format_fc)
-    sparse = fmt == "sparse"
+    sparse = _layer_format(layer, profile)
     macs = _segment_sums(counters.macs, bounds)
     fetches_dense = _segment_sums(counters.fetches_dense, bounds)
     synops = macs if sparse else fetches_dense
@@ -69,9 +121,39 @@ def aggregate_layer(counters: CounterMaps, layer_idx: int, part: Partition,
     )
 
 
-def core_times(cc: CoreCounters, neuron_model: str,
+def aggregate_layer_batch(counters: BatchCounters, layer_idx: int,
+                          part: Partition, net: SimNetwork,
+                          profile: ChipProfile) -> BatchCoreCounters:
+    """All-timesteps analog of :func:`aggregate_layer`: one segment-sum per
+    counter map instead of T per-step passes."""
+    layer = net.layers[layer_idx]
+    n = layer.n_neurons
+    bounds = part.boundaries(layer_idx, n)
+    sparse = _layer_format(layer, profile)
+    macs = _segment_sums_batch(counters.macs, bounds)
+    fetches_dense = _segment_sums_batch(counters.fetches_dense, bounds)
+    synops = macs if sparse else fetches_dense
+    acts_map = (counters.acts_evented if not profile.synchronous
+                else np.ones_like(counters.macs))
+    c = part.cores[layer_idx]
+    T = counters.macs.shape[0]
+    return BatchCoreCounters(
+        msgs_in=np.broadcast_to(
+            np.asarray(counters.msgs_in, np.float64)[:, None], (T, c)),
+        synops=synops,
+        macs=macs,
+        acts=_segment_sums_batch(acts_map, bounds),
+        msgs_out=_segment_sums_batch(counters.msgs_out, bounds),
+        neurons=np.diff(bounds).astype(np.float64),
+        sparse_format=sparse,
+    )
+
+
+def core_times(cc, neuron_model: str,
                profile: ChipProfile) -> tuple[np.ndarray, np.ndarray]:
-    """(memory-stage, compute-stage) time per core of one layer."""
+    """(memory-stage, compute-stage) time per core of one layer.  Works on
+    both per-step :class:`CoreCounters` and time-major
+    :class:`BatchCoreCounters` (the formulas are elementwise)."""
     p = profile
     if cc.sparse_format:
         mem = (cc.msgs_in * (p.c_msg_recv + p.c_decode_msg)
@@ -112,10 +194,153 @@ class SimReport:
 
 def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
              part: Partition | None = None,
-             mapping: Mapping | None = None) -> SimReport:
-    """Run the network on the simulated chip and price every timestep."""
+             mapping: Mapping | None = None, *,
+             engine: str | None = None,
+             precomputed: tuple | None = None) -> SimReport:
+    """Run the network on the simulated chip and price every timestep.
+
+    Args:
+      engine: "batched" (layer-major, default) or "reference" (step-major).
+      precomputed: a cached ``net.run_batch(xs)`` result to reuse — the
+        functional run is independent of partition/mapping/profile, so
+        optimization loops that re-price many partitions of the same
+        (net, xs) pair should compute it once.  Batched engine only: the
+        reference engine ignores it and re-runs the network step-major.
+    """
+    engine = engine or DEFAULT_ENGINE
     part = part or minimal_partition(net, profile)
     mapping = mapping or ordered_mapping(part, profile)
+    if engine == "batched":
+        return _simulate_batched(net, xs, profile, part, mapping, precomputed)
+    if engine == "reference":
+        return _simulate_reference(net, xs, profile, part, mapping)
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def _finish_report(net, part, T, times, energies, outputs, mean_synops,
+                   mean_acts, mean_msgs, max_synops_steps, max_acts_steps,
+                   max_link_steps, total_msgs, total_neuron_steps,
+                   stage_votes) -> SimReport:
+    """Shared report assembly for both engines (identical float math)."""
+    w_nnz = sum(l.w_nnz for l in net.layers)
+    w_cap = sum(l.n_weights for l in net.layers)
+    metrics = WorkloadMetrics(
+        synops=LoadStats.of(mean_synops),
+        acts=LoadStats.of(mean_acts),
+        traffic=LoadStats.of(np.array([max_link_steps.mean()])),
+        msgs_total=total_msgs / T,
+        weight_density=w_nnz / max(w_cap, 1),
+        act_density=(total_msgs / max(total_neuron_steps, 1.0)),
+    )
+    bottleneck = max(stage_votes.items(), key=lambda kv: kv[1])[0]
+    return SimReport(
+        time_per_step=float(times.mean()),
+        energy_per_step=float(energies.mean()),
+        times=times, energies=energies, metrics=metrics,
+        max_synops=float(max_synops_steps.mean()),
+        max_acts=float(max_acts_steps.mean()),
+        max_link_load=float(max_link_steps.mean()),
+        n_cores_active=part.total_cores,
+        outputs=outputs,
+        per_core_synops=mean_synops,
+        per_core_acts=mean_acts,
+        per_core_msgs_out=mean_msgs,
+        bottleneck_stage=bottleneck,
+    )
+
+
+def _simulate_batched(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
+                      part: Partition, mapping: Mapping,
+                      precomputed: tuple | None) -> SimReport:
+    """Layer-major engine: every per-step quantity is a (T, ...) array."""
+    outputs, all_counters = precomputed or net.run_batch(xs)
+
+    T = xs.shape[0]
+    n_layers = len(net.layers)
+    n_logical = part.total_cores
+
+    layer_cc = [aggregate_layer_batch(all_counters[l], l, part, net, profile)
+                for l in range(n_layers)]
+
+    mem_all, act_all = [], []
+    e_events = np.zeros(T, np.float64)
+    total_msgs = 0.0
+    total_neuron_steps = 0.0
+    for l, cc in enumerate(layer_cc):
+        mem, act = core_times(cc, net.layers[l].neuron_model, profile)
+        mem_all.append(mem)
+        act_all.append(act)
+        # event energies: fetch every (format-effective) synop; MAC energy
+        # only on nonzero weights (dense formats skip the multiply ->
+        # the small Fig-2 energy benefit of CNN weight sparsity)
+        e_events += (profile.e_fetch * cc.synops.sum(axis=1)
+                     + profile.e_mac * cc.macs.sum(axis=1)
+                     + (profile.e_decode * cc.synops.sum(axis=1)
+                        if cc.sparse_format else 0.0)
+                     + profile.e_act * cc.acts.sum(axis=1)
+                     * (profile.neuron_cost(net.layers[l].neuron_model)
+                        / profile.c_act))
+        total_msgs += cc.msgs_out.sum()
+        total_neuron_steps += T * cc.neurons.sum()
+
+    synops_all = np.concatenate([cc.synops for cc in layer_cc], axis=1)
+    acts_all = np.concatenate([cc.acts for cc in layer_cc], axis=1)
+    msgs_all = np.concatenate([cc.msgs_out for cc in layer_cc], axis=1)
+
+    traffic = route_batch(part, mapping, msgs_all, profile)
+    mem_cat = np.concatenate(mem_all, axis=1)       # (T, n_logical)
+    act_cat = np.concatenate(act_all, axis=1)
+    core_time = np.maximum(mem_cat, act_cat) + profile.t_core_fixed
+    # Congestion: the busiest router serializes every packet touching it;
+    # cores also serialize their own (duplicated) injections.
+    max_link_steps = traffic.max_router_load        # (T,)
+    traffic_time = (profile.c_route * max_link_steps
+                    + profile.c_inject
+                    * traffic.inject_per_core.max(axis=1, initial=0.0))
+
+    stage_votes = {"memory": 0, "compute": 0, "traffic": 0, "barrier": 0}
+    if profile.synchronous:
+        t_compute = core_time.max(axis=1, initial=0.0)
+        times = np.maximum(t_compute, traffic_time) + profile.t_barrier
+        traffic_bound = traffic_time > t_compute
+        mem_bound = (mem_cat.max(axis=1, initial=0.0)
+                     >= act_cat.max(axis=1, initial=0.0))
+        stage_votes["traffic"] = int(traffic_bound.sum())
+        stage_votes["memory"] = int((~traffic_bound & mem_bound).sum())
+        stage_votes["compute"] = int((~traffic_bound & ~mem_bound).sum())
+    else:
+        # async pipeline: sample latency = sum over layers of the layer's
+        # slowest event-driven core + NoC transit
+        times = np.zeros(T, np.float64)
+        for m, a in zip(mem_all, act_all):
+            times = times + np.maximum(m, a).max(axis=1, initial=0.0)
+        times = times + (profile.c_msg_hop * traffic.total_hops
+                         / max(part.total_cores, 1))
+        stage_votes["memory"] = T
+
+    n_active = np.sum((synops_all + msgs_all) > 0, axis=1).astype(np.float64)
+    n_active[n_active == 0] = n_logical
+    e_hops = profile.e_msg_hop * traffic.total_hops
+    energies = (times * (profile.p_idle + profile.p_core * n_active)
+                + e_events + e_hops)
+
+    mean_synops = synops_all.sum(axis=0) / T
+    mean_acts = acts_all.sum(axis=0) / T
+    mean_msgs = msgs_all.sum(axis=0) / T
+    return _finish_report(
+        net, part, T, times, energies, outputs, mean_synops, mean_acts,
+        mean_msgs,
+        max_synops_steps=synops_all.max(axis=1, initial=0.0),
+        max_acts_steps=acts_all.max(axis=1, initial=0.0),
+        max_link_steps=max_link_steps,
+        total_msgs=total_msgs, total_neuron_steps=total_neuron_steps,
+        stage_votes=stage_votes)
+
+
+def _simulate_reference(net: SimNetwork, xs: np.ndarray,
+                        profile: ChipProfile, part: Partition,
+                        mapping: Mapping) -> SimReport:
+    """Step-major reference engine (original implementation)."""
     outputs, all_counters = net.run(xs)
 
     T = xs.shape[0]
@@ -150,9 +375,6 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
             sum_core_synops[sl] += cc.synops
             sum_core_acts[sl] += cc.acts
             sum_core_msgs[sl] += cc.msgs_out
-            # event energies: fetch every (format-effective) synop; MAC energy
-            # only on nonzero weights (dense formats skip the multiply ->
-            # the small Fig-2 energy benefit of CNN weight sparsity)
             e_events += (profile.e_fetch * cc.synops.sum()
                          + profile.e_mac * cc.macs.sum()
                          + (profile.e_decode * cc.synops.sum()
@@ -167,8 +389,6 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
         mem_cat = np.concatenate(mem_all)
         act_cat = np.concatenate(act_all)
         core_time = np.maximum(mem_cat, act_cat) + profile.t_core_fixed
-        # Congestion: the busiest router serializes every packet touching it;
-        # cores also serialize their own (duplicated) injections.
         traffic_time = (profile.c_route * traffic.max_router_load
                         + profile.c_inject
                         * float(traffic.inject_per_core.max(initial=0.0)))
@@ -180,8 +400,6 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                      ("memory" if mem_cat.max(initial=0.0)
                       >= act_cat.max(initial=0.0) else "compute"))
         else:
-            # async pipeline: sample latency = sum over layers of the layer's
-            # slowest event-driven core + NoC transit
             per_layer = [float(np.maximum(m, a).max(initial=0.0))
                          for m, a in zip(mem_all, act_all)]
             t_step = sum(per_layer) + profile.c_msg_hop * traffic.total_hops / max(
@@ -201,32 +419,12 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
         max_acts_steps[t] = acts_step.max(initial=0.0)
         max_link_steps[t] = traffic.max_router_load
 
-    mean_synops = sum_core_synops / T
-    mean_acts = sum_core_acts / T
-    mean_msgs = sum_core_msgs / T
-
-    w_nnz = sum(float((l.weights != 0).sum()) for l in net.layers)
-    w_cap = sum(l.n_weights for l in net.layers)
-    metrics = WorkloadMetrics(
-        synops=LoadStats.of(mean_synops),
-        acts=LoadStats.of(mean_acts),
-        traffic=LoadStats.of(np.array([max_link_steps.mean()])),
-        msgs_total=total_msgs / T,
-        weight_density=w_nnz / max(w_cap, 1),
-        act_density=(total_msgs / max(total_neuron_steps, 1.0)),
-    )
-    bottleneck = max(stage_votes.items(), key=lambda kv: kv[1])[0]
-    return SimReport(
-        time_per_step=float(times.mean()),
-        energy_per_step=float(energies.mean()),
-        times=times, energies=energies, metrics=metrics,
-        max_synops=float(max_synops_steps.mean()),
-        max_acts=float(max_acts_steps.mean()),
-        max_link_load=float(max_link_steps.mean()),
-        n_cores_active=n_logical,
-        outputs=outputs,
-        per_core_synops=mean_synops,
-        per_core_acts=mean_acts,
-        per_core_msgs_out=mean_msgs,
-        bottleneck_stage=bottleneck,
-    )
+    return _finish_report(
+        net, part, T, times, energies, outputs,
+        mean_synops=sum_core_synops / T,
+        mean_acts=sum_core_acts / T,
+        mean_msgs=sum_core_msgs / T,
+        max_synops_steps=max_synops_steps, max_acts_steps=max_acts_steps,
+        max_link_steps=max_link_steps,
+        total_msgs=total_msgs, total_neuron_steps=total_neuron_steps,
+        stage_votes=stage_votes)

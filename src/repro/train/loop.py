@@ -33,10 +33,7 @@ from repro.train import checkpoint as ckpt_lib
 from repro.train import step as step_lib
 from repro.train.optim import Optimizer
 
-try:
-    shard_map = jax.shard_map
-except AttributeError:                              # pragma: no cover
-    from jax.experimental.shard_map import shard_map
+from repro.distributed.compat import shard_map
 
 
 @dataclasses.dataclass

@@ -1,0 +1,194 @@
+"""Equivalence suite: the layer-major batched engine must match the
+step-major reference engine — outputs allclose (float32 GEMM batching is
+allowed to differ in the last ulp), every counter / per-core aggregate /
+time / energy bit-identical — across layer kinds, all four neuron models,
+sigma-delta delta chains, sync and async profiles, and both mappings."""
+
+import numpy as np
+import pytest
+
+from repro.neuromorphic import (SimLayer, SimNetwork, fc_network, loihi2_like,
+                                make_inputs, programmed_fc_network, simulate,
+                                speck_like)
+from repro.neuromorphic.network import _exact_density_mask
+from repro.neuromorphic.noc import (Mapping, ordered_mapping, route_batch,
+                                    route_step, strided_mapping)
+from repro.neuromorphic.partition import Partition, minimal_partition
+
+
+def assert_engines_match(net, xs, prof, part=None, mapping=None):
+    r_ref = simulate(net, xs, prof, part, mapping, engine="reference")
+    r_bat = simulate(net, xs, prof, part, mapping, engine="batched")
+    np.testing.assert_allclose(r_bat.outputs, r_ref.outputs,
+                               rtol=1e-5, atol=1e-6)
+    # cost-model quantities must be BIT-identical (counters are integer
+    # counts, and both engines use the same float op order on them)
+    for field in ("times", "energies", "per_core_synops", "per_core_acts",
+                  "per_core_msgs_out"):
+        a, b = getattr(r_bat, field), getattr(r_ref, field)
+        assert np.array_equal(a, b), f"{field} diverged"
+    assert r_bat.max_synops == r_ref.max_synops
+    assert r_bat.max_acts == r_ref.max_acts
+    assert r_bat.max_link_load == r_ref.max_link_load
+    assert r_bat.bottleneck_stage == r_ref.bottleneck_stage
+    assert r_bat.n_cores_active == r_ref.n_cores_active
+    assert r_bat.metrics == r_ref.metrics
+    return r_ref, r_bat
+
+
+def conv_stack(*, neuron_model="relu", sends_deltas=False, threshold=0.0,
+               weight_density=0.6, seed=0):
+    """conv -> conv -> fc stack (channel-major flat boundaries)."""
+    rng = np.random.default_rng(seed)
+    layers = []
+    h = w = 8
+    c_prev = 2
+    for i, c in enumerate((4, 8)):
+        wgt = rng.normal(0, 1 / 3.0, (3, 3, c_prev, c)).astype(np.float32)
+        wgt *= _exact_density_mask(wgt.shape, weight_density, rng)
+        layers.append(SimLayer(
+            name=f"conv{i}", kind="conv", weights=wgt, stride=2,
+            in_hw=(h, w), neuron_model=neuron_model, threshold=threshold,
+            sends_deltas=sends_deltas))
+        h, w, c_prev = h // 2, w // 2, c
+    wfc = rng.normal(0, 0.3, (h * w * c_prev, 10)).astype(np.float32)
+    layers.append(SimLayer(name="fc", kind="fc", weights=wfc,
+                           neuron_model="relu"))
+    return SimNetwork(layers=layers, in_size=8 * 8 * 2)
+
+
+class TestCounterParity:
+    """run_batch counter maps == per-step run counter maps, bit for bit."""
+
+    @pytest.mark.parametrize("model,thr", [("relu", 0.0), ("if", 0.6),
+                                           ("sd_relu", 0.03), ("ssm", 0.0)])
+    def test_fc_counters_bit_identical(self, model, thr):
+        net = fc_network([48, 64, 32], weight_density=0.5,
+                         neuron_model=model, seed=3)
+        for l in net.layers:
+            l.threshold = thr
+            if model == "sd_relu":
+                l.sends_deltas = True
+        xs = make_inputs(48, 0.5, 6, seed=4)
+        _, ref = net.run(xs)
+        _, bat = net.run_batch(xs)
+        for l, bc in enumerate(bat):
+            for t in range(xs.shape[0]):
+                cm, sv = ref[t][l], bc.step_view(t)
+                assert cm.msgs_in == sv.msgs_in
+                for f in ("macs", "fetches_dense", "msgs_out",
+                          "acts_evented"):
+                    assert np.array_equal(getattr(cm, f), getattr(sv, f)), \
+                        (l, t, f)
+
+    def test_conv_counters_bit_identical(self):
+        net = conv_stack(seed=1)
+        xs = make_inputs(net.in_size, 0.4, 4, seed=2)
+        _, ref = net.run(xs)
+        _, bat = net.run_batch(xs)
+        for l, bc in enumerate(bat):
+            for t in range(xs.shape[0]):
+                cm, sv = ref[t][l], bc.step_view(t)
+                assert cm.msgs_in == sv.msgs_in
+                assert np.array_equal(cm.macs, sv.macs)
+                assert np.array_equal(cm.fetches_dense, sv.fetches_dense)
+                assert np.array_equal(cm.msgs_out, sv.msgs_out)
+
+
+class TestSimulateParity:
+    @pytest.mark.parametrize("model,thr", [("relu", 0.0), ("if", 0.6),
+                                           ("sd_relu", 0.03), ("ssm", 0.0)])
+    def test_fc_all_neuron_models(self, model, thr):
+        net = fc_network([96, 128, 64], weight_density=0.5,
+                         neuron_model=model, seed=0)
+        for l in net.layers:
+            l.threshold = thr
+        xs = make_inputs(96, 0.4, 5, seed=1)
+        assert_engines_match(net, xs, loihi2_like())
+
+    def test_fc_sigma_delta_chain(self):
+        """sends_deltas downstream layers exercise the cumsum input
+        reconstruction across every layer boundary."""
+        net = fc_network([64, 96, 96, 32], neuron_model="sd_relu", seed=5)
+        for l in net.layers:
+            l.threshold, l.sends_deltas = 0.02, True
+        xs = make_inputs(64, 0.5, 8, seed=6)
+        assert_engines_match(net, xs, loihi2_like())
+
+    def test_conv_stack_sync(self):
+        net = conv_stack(seed=7)
+        xs = make_inputs(net.in_size, 0.5, 4, seed=8)
+        assert_engines_match(net, xs, loihi2_like())
+
+    def test_conv_sigma_delta(self):
+        net = conv_stack(neuron_model="sd_relu", sends_deltas=True,
+                         threshold=0.05, seed=9)
+        xs = make_inputs(net.in_size, 0.5, 5, seed=10)
+        assert_engines_match(net, xs, loihi2_like())
+
+    def test_async_speck_if(self):
+        net = fc_network([96, 64, 10], neuron_model="if", seed=11)
+        for l in net.layers:
+            l.threshold = 0.5
+        xs = make_inputs(96, 0.3, 6, seed=12)
+        r_ref, _ = assert_engines_match(net, xs, speck_like())
+        assert r_ref.bottleneck_stage == "memory"   # async is pipeline-sum
+
+    def test_programmed_gates_force_active(self):
+        net = programmed_fc_network([128] * 4, weight_densities=[0.5] * 3,
+                                    act_densities=[0.9, 0.1, 0.5], seed=13,
+                                    weight_format="sparse")
+        xs = make_inputs(128, 0.5, 4, seed=14)
+        assert_engines_match(net, xs, loihi2_like())
+
+    @pytest.mark.parametrize("make_mapping", [ordered_mapping,
+                                              strided_mapping])
+    def test_partitioned_both_mappings(self, make_mapping):
+        net = fc_network([128, 192, 192, 64], weight_density=0.4, seed=15)
+        xs = make_inputs(128, 0.6, 5, seed=16)
+        prof = loihi2_like()
+        part = Partition((6, 8, 3))
+        assert_engines_match(net, xs, prof, part, make_mapping(part, prof))
+
+    def test_empty_core_partition(self):
+        """More cores than neurons in a layer: empty segments must sum to 0
+        in the batched aggregation too (reduceat would repeat a neuron)."""
+        net = fc_network([16, 6, 8], weight_density=1.0, seed=19)
+        xs = make_inputs(16, 0.8, 3, seed=20)
+        part = Partition((7, 1))      # layer 0 has 6 neurons on 7 cores
+        assert_engines_match(net, xs, loihi2_like(), part)
+
+    def test_precomputed_run_reuse(self):
+        """A cached run_batch result prices any partition identically."""
+        net = fc_network([96, 96, 96, 48], weight_density=0.5, seed=17)
+        xs = make_inputs(96, 0.5, 4, seed=18)
+        prof = loihi2_like()
+        pre = net.run_batch(xs)
+        for cores in ((1, 1, 1), (4, 2, 2), (8, 8, 4)):
+            part = Partition(cores)
+            ra = simulate(net, xs, prof, part, precomputed=pre)
+            rb = simulate(net, xs, prof, part, engine="reference")
+            assert np.array_equal(ra.times, rb.times)
+            assert np.array_equal(ra.per_core_synops, rb.per_core_synops)
+
+
+class TestRouteBatchParity:
+    def test_route_batch_matches_route_step(self):
+        prof = loihi2_like()
+        part = Partition((5, 7, 3))
+        rng = np.random.default_rng(0)
+        T, n = 6, part.total_cores
+        msgs = rng.integers(0, 40, (T, n)).astype(np.float64)
+        offsets = np.concatenate([[0], np.cumsum(part.cores)]).astype(int)
+        for mapping in (ordered_mapping(part, prof),
+                        strided_mapping(part, prof)):
+            batch = route_batch(part, mapping, msgs, prof)
+            for t in range(T):
+                per_layer = [msgs[t, offsets[l]:offsets[l + 1]]
+                             for l in range(len(part.cores))]
+                step = route_step(part, mapping, per_layer, prof)
+                assert np.array_equal(batch.router_loads[t],
+                                      step.router_loads)
+                assert batch.total_hops[t] == step.total_hops
+                assert np.array_equal(batch.inject_per_core[t],
+                                      step.inject_per_core)
