@@ -1,31 +1,48 @@
 """Benchmark driver: one experiment per paper table/figure + the TPU
-roofline table.  ``python -m benchmarks.run [--quick]``."""
+roofline table + the engine/search microbenchmarks.
+
+``python -m benchmarks.run [--quick] [--smoke] [--only NAME] [--engine E]``
+
+``--quick`` shrinks every experiment; ``--smoke`` (implies ``--quick``)
+shrinks the expensive ones further so the WHOLE suite — including the
+mapping-search head-to-head — finishes in a couple of minutes, as a CI
+smoke path.  ``--engine`` flips ``repro.neuromorphic.timestep.DEFAULT_ENGINE``
+for every experiment in the process.
+"""
 
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import time
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="extra-small sizes for CI (implies --quick)")
     ap.add_argument("--only", default=None)
     ap.add_argument("--engine", default=None,
                     choices=("batched", "reference"),
                     help="simulator engine for every experiment "
                          "(default: layer-major batched)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.quick = True
+    # authoritative per-invocation: a stale/inherited value must not flip
+    # benchmark sizes without the flag
+    os.environ["REPRO_BENCH_SMOKE"] = "1" if args.smoke else "0"
 
     if args.engine:
         from repro.neuromorphic import timestep
         timestep.DEFAULT_ENGINE = args.engine
 
     from benchmarks import (act_schedules, compute_floor, max_synops,
-                            sim_speed, stage1_sparsity, stage2_partitioning,
-                            tpu_roofline, traffic_mapping, weight_format,
-                            weight_sparsity)
+                            search_mapping, sim_speed, stage1_sparsity,
+                            stage2_partitioning, tpu_roofline,
+                            traffic_mapping, weight_format, weight_sparsity)
 
     mods = [
         ("sim_speed", sim_speed),
@@ -37,6 +54,7 @@ def main(argv=None):
         ("fig8_traffic_mapping", traffic_mapping),
         ("fig10_11_stage1", stage1_sparsity),
         ("fig12_stage2", stage2_partitioning),
+        ("search_mapping", search_mapping),
         ("tpu_roofline", tpu_roofline),
     ]
     results = {}
@@ -57,6 +75,16 @@ def main(argv=None):
         print(f"   [{name} done in {dt:.1f}s]\n")
         results[name] = res
 
+    if args.only:
+        # partial runs refresh their experiments in place instead of
+        # truncating everything else previously recorded
+        try:
+            with open("benchmarks/results.json") as f:
+                merged = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            merged = {}
+        merged.update(results)
+        results = merged
     with open("benchmarks/results.json", "w") as f:
         json.dump(results, f, indent=1, default=float)
     print("wrote benchmarks/results.json")

@@ -1,0 +1,127 @@
+"""Greedy §VI-B walk vs evolutionary mapping search, head to head.
+
+Both optimizers price candidates through one :class:`SimEvaluator` kind
+(same pricing cache, same evaluation counting), so the comparison is
+iso-evaluation: with a total budget of B candidate pricings, the greedy
+walk converges after its own ``greedy_evals`` (it cannot spend more — that
+is its failure mode), while the evolutionary pipeline spends the same
+``greedy_evals`` producing its floorline-informed seeds and the remaining
+``B - greedy_evals`` on population generations.  A cold-start evolutionary
+run (no greedy seeds) gets the full budget B for reference.
+
+Writes ``BENCH_search.json`` at the repo root: best time/energy per
+optimizer at iso-evaluations plus evaluations/sec (the population-repricing
+throughput the batched engine buys).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks import workloads as W
+from repro.core.partitioner import SimEvaluator, optimize_partitioning
+from repro.core.search import evolutionary_search
+from repro.neuromorphic.noc import ordered_mapping
+from repro.neuromorphic.partition import minimal_partition
+
+BENCH_PATH = "BENCH_search.json"
+
+
+def _head_to_head(net, xs, prof, *, population_size: int, generations: int,
+                  seed: int = 0) -> dict:
+    # one pricing cache for every arm; each arm gets its own eval counter
+    shared = SimEvaluator(net, xs, prof)
+
+    # paper baseline: minimal partition + ordered mapping
+    p0 = minimal_partition(net, prof)
+    base = shared(p0, ordered_mapping(p0, prof))
+
+    # greedy §VI-B walk (converges; cannot use more evaluations)
+    ev_g = SimEvaluator(net, xs, prof, cache=shared.cache)
+    t0 = time.perf_counter()
+    greedy = optimize_partitioning(net, prof, ev_g)
+    t_greedy = time.perf_counter() - t0
+    budget = max(2 * ev_g.n_evals, population_size * (generations + 1))
+
+    # evolutionary pipeline: charged for the greedy evals behind its seeds
+    ev_e = SimEvaluator(net, xs, prof, cache=shared.cache)
+    t0 = time.perf_counter()
+    evo = evolutionary_search(
+        net, prof, ev_e, population_size=population_size,
+        generations=generations, seed=seed, greedy=greedy,
+        max_evaluations=budget - ev_g.n_evals)
+    t_evo = time.perf_counter() - t0
+
+    # cold start (no greedy seeds), full budget, for reference
+    ev_c = SimEvaluator(net, xs, prof, cache=shared.cache)
+    t0 = time.perf_counter()
+    cold = evolutionary_search(
+        net, prof, ev_c, population_size=population_size,
+        generations=generations, seed=seed, max_evaluations=budget)
+    t_cold = time.perf_counter() - t0
+
+    return {
+        "budget_evals": budget,
+        "baseline_time": base.time_per_step,
+        "greedy_time": greedy.report.time_per_step,
+        "greedy_energy": greedy.report.energy_per_step,
+        "greedy_evals": ev_g.n_evals,
+        "greedy_evals_per_sec": ev_g.n_evals / max(t_greedy, 1e-9),
+        "evo_time": evo.report.time_per_step,
+        "evo_energy": evo.report.energy_per_step,
+        "evo_evals": ev_g.n_evals + evo.n_evals,    # pipeline total
+        "evo_evals_per_sec": evo.n_evals / max(t_evo, 1e-9),
+        "evo_generations": evo.history[-1].generation,
+        "cold_time": cold.report.time_per_step,
+        "cold_evals": cold.n_evals,
+        "cold_evals_per_sec": cold.n_evals / max(t_cold, 1e-9),
+        "speedup_vs_greedy": greedy.report.time_per_step /
+        evo.report.time_per_step,
+        "speedup_vs_baseline": base.time_per_step / evo.report.time_per_step,
+        "energy_vs_greedy": greedy.report.energy_per_step /
+        evo.report.energy_per_step,
+    }
+
+
+def run(quick: bool = False) -> dict:
+    smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
+    steps = 2 if smoke else (3 if quick else 6)
+    pop = 8 if smoke else (12 if quick else 24)
+    gens = 2 if smoke else (5 if quick else 12)
+
+    out = {}
+    s5, prof = W.s5_sim(weight_density=0.5, seed=0, weight_format="sparse")
+    xs = W.sim_inputs(s5, 0.3, steps, seed=2)
+    out["s5"] = _head_to_head(s5, xs, prof, population_size=pop,
+                              generations=gens, seed=0)
+
+    pnet, pprof = W.pilotnet_sim(weight_density=0.6, seed=1)
+    pxs = W.sim_inputs(pnet, 0.3, max(steps - 1, 2), seed=3)
+    out["pilotnet"] = _head_to_head(pnet, pxs, pprof, population_size=pop,
+                                    generations=gens, seed=0)
+
+    with open(BENCH_PATH, "w") as f:
+        json.dump(out, f, indent=1)
+    return out
+
+
+def report(res: dict) -> str:
+    lines = ["## search_mapping — greedy §VI-B vs evolutionary "
+             "(iso-evaluation budget)"]
+    for name in ("s5", "pilotnet"):
+        r = res[name]
+        lines.append(
+            f"  {name:8s} B={r['budget_evals']:<4d} "
+            f"greedy={r['greedy_time']:8.1f} ({r['greedy_evals']} evals)  "
+            f"evo={r['evo_time']:8.1f} ({r['evo_evals']} evals) "
+            f"-> {r['speedup_vs_greedy']:.3f}x vs greedy, "
+            f"{r['speedup_vs_baseline']:.2f}x vs baseline")
+        lines.append(
+            f"  {'':8s} pricing rate: greedy "
+            f"{r['greedy_evals_per_sec']:7.1f} evals/s, population "
+            f"{r['evo_evals_per_sec']:7.1f} evals/s "
+            f"(cold-start evo: {r['cold_time']:.1f})")
+    lines.append(f"  wrote {BENCH_PATH}")
+    return "\n".join(lines)

@@ -7,7 +7,7 @@ import numpy as np
 
 from benchmarks import stage1_sparsity as s1
 from benchmarks import workloads as W
-from repro.core.partitioner import optimize_partitioning
+from repro.core.partitioner import SimEvaluator, optimize_partitioning
 from repro.neuromorphic.noc import ordered_mapping
 from repro.neuromorphic.partition import minimal_partition
 from repro.neuromorphic.platform import loihi2_like
@@ -16,16 +16,9 @@ from repro.train.data import SyntheticDenoise
 
 
 def _optimize(net, prof, xs):
-    # the functional run is partition/mapping independent: compute the
-    # layer-major counters once and re-price every candidate from them
-    # (only the batched engine consumes the cache)
-    from repro.neuromorphic import timestep
-    pre = (net.run_batch(xs) if timestep.DEFAULT_ENGINE == "batched"
-           else None)
-
-    def evaluate(part, mapping):
-        return simulate(net, xs, prof, part, mapping, precomputed=pre)
-    return optimize_partitioning(net, prof, evaluate)
+    # SimEvaluator builds the batched engine's pricing cache once and
+    # re-prices every candidate counter-free (reference engine: no cache)
+    return optimize_partitioning(net, prof, SimEvaluator(net, xs, prof))
 
 
 def run(quick: bool = False, stage1=None) -> dict:

@@ -1,5 +1,6 @@
 """The paper's primary contribution: bound-and-bottleneck analysis, the
-floorline performance model, and the two-stage optimization methodology."""
+floorline performance model, and the two-stage optimization methodology —
+plus the population-based mapping search built on top of them."""
 
 from repro.core.analytical import (Bottleneck, LayerConfig, OpCosts, OpCounts,
                                    layer_op_counts, min_cores_for_layer,
@@ -8,10 +9,34 @@ from repro.core.floorline import (FloorlineModel, OptimizationMove,
                                   WorkloadPoint, fit_floorline, floorline_curve)
 from repro.core.metrics import LoadStats, WorkloadMetrics, proxy_gap
 
+# The optimizer/search layers sit ABOVE the simulator (they import
+# repro.neuromorphic, whose modules import repro.core.metrics), so they are
+# re-exported lazily to keep `import repro.neuromorphic.timestep` acyclic.
+_LAZY = {name: "repro.core.partitioner" for name in (
+    "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator",
+    "can_split", "optimize_partitioning")}
+_LAZY.update({name: "repro.core.search" for name in (
+    "Candidate", "SearchResult", "decode", "decode_population", "encode",
+    "encode_population", "evolutionary_search", "greedy_then_evolve",
+    "seeded_population")})
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return getattr(importlib.import_module(_LAZY[name]), name)
+    raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+
+
 __all__ = [
     "Bottleneck", "LayerConfig", "OpCosts", "OpCounts", "layer_op_counts",
     "min_cores_for_layer", "predict_bottleneck",
     "FloorlineModel", "OptimizationMove", "WorkloadPoint", "fit_floorline",
     "floorline_curve",
     "LoadStats", "WorkloadMetrics", "proxy_gap",
+    "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator", "can_split",
+    "optimize_partitioning",
+    "Candidate", "SearchResult", "decode", "decode_population", "encode",
+    "encode_population", "evolutionary_search", "greedy_then_evolve",
+    "seeded_population",
 ]

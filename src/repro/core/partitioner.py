@@ -17,7 +17,15 @@ The paper's stage-2 procedure, verbatim in structure:
 
 The evaluator is any callable (partition, mapping) -> SimReport, so the same
 optimizer drives the neuromorphic simulator and, through an adapter, the TPU
-sharding hillclimb in :mod:`repro.distributed.autoshard`.
+sharding hillclimb in :mod:`repro.distributed.autoshard`.  The canonical
+implementation is :class:`SimEvaluator`: it builds the batched engine's
+pricing cache once, prices every candidate from it (single candidates and
+whole populations), and counts evaluations — the shared currency that makes
+the greedy walk here and the evolutionary search in
+:mod:`repro.core.search` comparable at iso-evaluations.  The move vocabulary
+(:meth:`Partition.split` / :meth:`Partition.merge` plus a re-mapping of the
+logical->physical placement, gated by :func:`can_split` /
+``validate_partition``) is likewise shared by both optimizers.
 """
 
 from __future__ import annotations
@@ -33,9 +41,59 @@ from repro.neuromorphic.noc import Mapping, strided_mapping
 from repro.neuromorphic.partition import (Partition, max_cores_for_layer,
                                           minimal_partition, validate_partition)
 from repro.neuromorphic.platform import ChipProfile
-from repro.neuromorphic.timestep import SimReport
+from repro.neuromorphic.timestep import (SimReport, precompute_pricing,
+                                         price_candidate, simulate,
+                                         simulate_population)
 
+#: Anything that prices a (partition, mapping) candidate.  Both optimizers
+#: (greedy §VI-B and the evolutionary search) accept any such callable;
+#: :class:`SimEvaluator` is the standard one.
 Evaluator = Callable[[Partition, Mapping], SimReport]
+
+
+class SimEvaluator:
+    """Evaluation-counting pricing gateway shared by both optimizers.
+
+    Wraps one (net, xs, profile) workload: the functional run and per-layer
+    counter cumsums are computed once (``engine="batched"``), after which
+    every candidate — single or population — is priced counter-free from the
+    cache.  ``n_evals`` counts priced candidates, the budget unit for
+    greedy-vs-evolutionary comparisons (``benchmarks/search_mapping.py``).
+
+    With ``engine="reference"`` candidates are priced by the step-major
+    engine (no cache); results are identical, just slower — useful for
+    auditing the cache path at small scale.
+    """
+
+    def __init__(self, net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
+                 *, engine: str | None = None, cache=None):
+        from repro.neuromorphic import timestep
+        self.net, self.xs, self.profile = net, xs, profile
+        self.engine = engine or timestep.DEFAULT_ENGINE
+        # ``cache=`` shares one PricingCache between evaluators that only
+        # differ in their evaluation counters (e.g. benchmark arms)
+        self.cache = (cache or precompute_pricing(net, xs, profile)
+                      if self.engine == "batched" else None)
+        self.n_evals = 0
+
+    def __call__(self, part: Partition, mapping: Mapping) -> SimReport:
+        self.n_evals += 1
+        if self.cache is not None:
+            return price_candidate(self.net, self.profile, self.cache,
+                                   part, mapping)
+        return simulate(self.net, self.xs, self.profile, part, mapping,
+                        engine=self.engine)
+
+    def evaluate_population(self, candidates) -> list[SimReport]:
+        """Price a list of (partition, mapping) pairs; one stacked gather
+        per layer when the pricing cache is live."""
+        cands = list(candidates)
+        self.n_evals += len(cands)
+        if self.cache is not None:
+            return simulate_population(self.net, self.xs, self.profile,
+                                       cands, cache=self.cache)
+        return [simulate(self.net, self.xs, self.profile, p, m,
+                         engine=self.engine) for p, m in cands]
 
 
 @dataclasses.dataclass
@@ -87,8 +145,12 @@ def _bottleneck_layers(per_core: np.ndarray, part: Partition,
     return sorted({int(l) for l in core_layers[hot]})
 
 
-def _splittable(net: SimNetwork, part: Partition, layer: int,
-                profile: ChipProfile) -> bool:
+def can_split(net: SimNetwork, part: Partition, layer: int,
+              profile: ChipProfile) -> bool:
+    """True iff the split move is legal for ``layer``: granularity, chip
+    core budget, and per-core capacities all hold after the split.  Shared
+    gate for the greedy optimizer's and the evolutionary search's split
+    moves."""
     if part.cores[layer] >= max_cores_for_layer(net, layer):
         return False
     if part.total_cores + 1 > profile.n_cores:
@@ -106,7 +168,17 @@ def optimize_partitioning(
     energy_guard: bool = True,
     make_mapping: Callable[[Partition, ChipProfile], Mapping] = strided_mapping,
 ) -> OptimizationResult:
-    """Run the §VI-B iterative backtracking procedure."""
+    """Run the §VI-B iterative backtracking procedure.
+
+    ``evaluate`` is any :data:`Evaluator` — a callable
+    ``(Partition, Mapping) -> SimReport`` — typically a
+    :class:`SimEvaluator` so evaluations are counted and priced from one
+    shared functional run.  Moves are accepted only when time improves by
+    more than ``time_improvement_tol`` (relative) and, under
+    ``energy_guard``, energy does not regress without a timing benefit.
+    Returns the best (partition, mapping, report) plus the full accept /
+    backtrack history, whose accepted prefix traces the floorline.
+    """
     part = minimal_partition(net, profile)
     mapping = make_mapping(part, profile)
     best = evaluate(part, mapping)
@@ -127,7 +199,7 @@ def optimize_partitioning(
             per_core = (best.per_core_synops if assumption is Bottleneck.MEMORY
                         else best.per_core_acts)
             layers = [l for l in _bottleneck_layers(per_core, part)
-                      if _splittable(net, part, l, profile)]
+                      if can_split(net, part, l, profile)]
             cand_part = part
             for l in layers:
                 if validate_partition(net, cand_part.split(l), profile):

@@ -1,0 +1,384 @@
+"""Vectorized evolutionary search over (partition, mapping) candidates.
+
+The paper's stage-2 optimizer (§VI-B, :mod:`repro.core.partitioner`) walks
+one candidate at a time: split the bottleneck layer, re-price, backtrack.
+That is cheap but easily trapped — a split that only pays off together with
+a re-mapping is never found, and the walk prices exactly one candidate per
+step.  Population-based search over accelerator mappings (cf. "Evolutionary
+Mapping of Neural Networks to Spatial Accelerators") dominates greedy
+hillclimbing on this problem precisely because it holds many (partition,
+mapping) hypotheses at once; what made it affordable *here* is the batched
+engine's pricing split: one functional run + per-layer counter cumsums
+(:func:`repro.neuromorphic.timestep.precompute_pricing`) price an entire
+generation with one stacked gather per layer
+(:func:`repro.neuromorphic.timestep.simulate_population`).
+
+Candidates are encoded as fixed-shape arrays regardless of how many cores a
+partition uses:
+
+* ``cores`` — per-layer core counts, shape ``(n_layers,)``;
+* ``perm``  — a permutation of ALL physical core slots, shape
+  ``(profile.n_cores,)``.  The decoded mapping is ``perm[:total_cores]``:
+  a split simply pulls the next gene into use, a merge releases one, and a
+  gene swap is always a valid mapping move.  ``encode``/``decode`` round-trip
+  the partition and physical placement exactly (``tests/test_search.py``).
+
+The generation loop is (mu + lambda) elitist: tournament parent selection,
+floorline-guided mutation (the parent's bottleneck stage picks the move —
+memory/compute -> split the hot layer, traffic -> re-map or coagulate, with
+an exploration probability of a uniformly random move), then survival of the
+``population_size`` best unique candidates.  Elitism plus floorline-informed
+seeding (the greedy optimizer's accepted moves are injected into the initial
+population) guarantee the search never returns a candidate worse than its
+best seed — and never worse than the greedy result when seeded from it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.partitioner import (Evaluator, OptimizationResult,
+                                    _argmax_layer, can_split,
+                                    optimize_partitioning)
+from repro.neuromorphic.network import SimNetwork
+from repro.neuromorphic.noc import (Mapping, ordered_mapping, random_mapping,
+                                    strided_mapping)
+from repro.neuromorphic.partition import (Partition, minimal_partition,
+                                          validate_partition)
+from repro.neuromorphic.platform import ChipProfile
+from repro.neuromorphic.timestep import SimReport
+
+_STAGES = ("memory", "compute", "traffic")
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """Fixed-shape genome: per-layer core counts + a permutation of every
+    physical core slot (only the first ``total_cores`` genes are expressed
+    as the mapping)."""
+
+    cores: tuple[int, ...]
+    perm: tuple[int, ...]
+
+    @property
+    def n_logical(self) -> int:
+        return int(sum(self.cores))
+
+    def partition(self) -> Partition:
+        return Partition(self.cores)
+
+    def mapping(self) -> Mapping:
+        return Mapping(self.perm[:self.n_logical], name="evolved")
+
+
+def encode(part: Partition, mapping: Mapping,
+           n_cores_phys: int) -> Candidate:
+    """(Partition, Mapping) -> fixed-shape genome.  The mapping's slots
+    become the leading genes; unused physical slots follow in ascending
+    order, so ``decode(encode(p, m))`` reproduces the partition and the
+    ``phys`` placement exactly (the decoded mapping is named "evolved")."""
+    used = tuple(int(p) for p in mapping.phys)
+    taken = set(used)
+    rest = tuple(s for s in range(n_cores_phys) if s not in taken)
+    return Candidate(tuple(int(c) for c in part.cores), used + rest)
+
+
+def decode(cand: Candidate) -> tuple[Partition, Mapping]:
+    return cand.partition(), cand.mapping()
+
+
+def _phenotype(cand: Candidate) -> tuple:
+    """Dedup key: only the expressed genes.  Two genomes that differ in the
+    unexpressed permutation tail decode to the same (partition, mapping)
+    and must not be priced twice or hold two elitist slots."""
+    return (cand.cores, cand.perm[:cand.n_logical])
+
+
+def encode_population(cands: list[Candidate]) -> tuple[np.ndarray, np.ndarray]:
+    """Population -> ((K, n_layers) core counts, (K, n_cores_phys) perms),
+    the fixed-shape array interchange form (storage, transport, or future
+    array-level genome operators; the search itself mutates
+    :class:`Candidate` objects)."""
+    cores = np.asarray([c.cores for c in cands], np.int32)
+    perm = np.asarray([c.perm for c in cands], np.int32)
+    return cores, perm
+
+
+def decode_population(cores: np.ndarray, perm: np.ndarray) -> list[Candidate]:
+    return [Candidate(tuple(int(x) for x in cr), tuple(int(x) for x in pr))
+            for cr, pr in zip(cores, perm)]
+
+
+@dataclasses.dataclass
+class GenStats:
+    """Per-generation progress record."""
+
+    generation: int
+    best_time: float
+    best_energy: float
+    mean_time: float
+    n_evals: int            # cumulative evaluations after this generation
+
+
+@dataclasses.dataclass
+class SearchResult:
+    candidate: Candidate
+    partition: Partition
+    mapping: Mapping
+    report: SimReport
+    history: list[GenStats]
+    n_evals: int
+    seed_best_time: float   # best initial-population time (never-worse bound)
+
+
+def _fitness(r: SimReport) -> tuple[float, float]:
+    """Minimize time first, energy as the tie-break (the paper's energy
+    guard: equal-time candidates should not burn more power)."""
+    return (r.time_per_step, r.energy_per_step)
+
+
+def _evaluate(evaluator: Evaluator, cands: list[Candidate]) -> list[SimReport]:
+    pairs = [decode(c) for c in cands]
+    ep = getattr(evaluator, "evaluate_population", None)
+    if ep is not None:
+        return ep(pairs)
+    return [evaluator(p, m) for p, m in pairs]
+
+
+# ------------------------------------------------------------------ seeding
+
+def seeded_population(net: SimNetwork, profile: ChipProfile, *, size: int,
+                      rng: np.random.Generator,
+                      greedy: OptimizationResult | None = None,
+                      ) -> list[Candidate]:
+    """Floorline-informed initial population.
+
+    Seeds, in priority order (truncation keeps the head): the greedy
+    optimizer's final (partition, mapping) and its accepted intermediate
+    partitions under a strided mapping, the minimal partition under
+    strided / ordered mappings, then random split-walks with random
+    mappings up to ``size``.
+    """
+    P = profile.n_cores
+    seeds: list[Candidate] = []
+    if greedy is not None:
+        seeds.append(encode(greedy.partition, greedy.mapping, P))
+        for step in greedy.history:
+            if step.accepted:
+                seeds.append(encode(step.partition,
+                                    strided_mapping(step.partition, profile),
+                                    P))
+    p0 = minimal_partition(net, profile)
+    seeds.append(encode(p0, strided_mapping(p0, profile), P))
+    seeds.append(encode(p0, ordered_mapping(p0, profile), P))
+
+    unique: list[Candidate] = []
+    for c in seeds:
+        if c not in unique:
+            unique.append(c)
+    unique = unique[:size]
+
+    guard = 0
+    while len(unique) < size and guard < 50 * size:
+        guard += 1
+        part = p0
+        for _ in range(int(rng.integers(0, len(net.layers) * 2 + 1))):
+            l = int(rng.integers(len(net.layers)))
+            if can_split(net, part, l, profile):
+                part = part.split(l)
+        c = encode(part, random_mapping(part, profile, rng), P)
+        if c not in unique:
+            unique.append(c)
+    return unique
+
+
+# ---------------------------------------------------------------- mutations
+
+def _swap_move(cand: Candidate, rng: np.random.Generator) -> Candidate:
+    """Swap one expressed mapping gene with any other gene — re-places a
+    logical core onto a different physical slot (possibly one currently
+    unused).  Always yields a valid candidate."""
+    perm = list(cand.perm)
+    n = cand.n_logical
+    i = int(rng.integers(0, max(n, 1)))
+    j = int(rng.integers(0, len(perm)))
+    if i == j:
+        j = (j + 1) % len(perm)
+    perm[i], perm[j] = perm[j], perm[i]
+    return Candidate(cand.cores, tuple(perm))
+
+
+def _split_move(cand: Candidate, per_core: np.ndarray, net: SimNetwork,
+                profile: ChipProfile,
+                rng: np.random.Generator) -> Candidate | None:
+    """Split the bottleneck layer (or, failing that, a random splittable
+    one) — the memory/compute assumption's move, locating the hot layer by
+    the greedy walk's own rule."""
+    part = cand.partition()
+    hot = _argmax_layer(per_core, part)
+    layers = [hot] + [int(l) for l in rng.permutation(len(part.cores))]
+    for l in layers:
+        if can_split(net, part, l, profile):
+            return Candidate(part.split(l).cores, cand.perm)
+    return None
+
+
+def _merge_move(cand: Candidate, net: SimNetwork, profile: ChipProfile,
+                rng: np.random.Generator) -> Candidate | None:
+    """Coagulate a multi-core layer (§VI-A move (c): fewer cores -> less
+    message duplication and active power)."""
+    part = cand.partition()
+    for l in rng.permutation(len(part.cores)):
+        if part.cores[int(l)] > 1:
+            merged = part.merge(int(l))
+            if validate_partition(net, merged, profile):
+                return Candidate(merged.cores, cand.perm)
+    return None
+
+
+def mutate(cand: Candidate, report: SimReport, net: SimNetwork,
+           profile: ChipProfile, rng: np.random.Generator, *,
+           explore_prob: float = 0.25) -> Candidate:
+    """Floorline-guided mutation: the parent's bottleneck stage selects the
+    move family (§VI-A a/b/c), with probability ``explore_prob`` of a
+    uniformly random stage instead.  Falls back across families until a
+    valid, different candidate emerges (a gene swap always is)."""
+    stage = report.bottleneck_stage
+    if stage not in _STAGES or rng.random() < explore_prob:
+        stage = _STAGES[int(rng.integers(len(_STAGES)))]
+    for _ in range(4):
+        if stage == "memory":
+            child = _split_move(cand, report.per_core_synops, net, profile,
+                                rng)
+        elif stage == "compute":
+            child = _split_move(cand, report.per_core_acts, net, profile, rng)
+        elif rng.random() < 0.5:
+            child = _merge_move(cand, net, profile, rng)
+        else:
+            child = _swap_move(cand, rng)
+        if (child is not None and child != cand
+                and validate_partition(net, child.partition(), profile)):
+            return child
+        stage = _STAGES[int(rng.integers(len(_STAGES)))]
+    return _swap_move(cand, rng)
+
+
+def _tournament(reports: list[SimReport], k: int,
+                rng: np.random.Generator) -> int:
+    idx = rng.integers(0, len(reports), size=max(1, k))
+    return int(min(idx, key=lambda i: _fitness(reports[int(i)])))
+
+
+# ------------------------------------------------------------------- search
+
+def evolutionary_search(
+    net: SimNetwork,
+    profile: ChipProfile,
+    evaluator: Evaluator,
+    *,
+    population_size: int = 24,
+    generations: int = 16,
+    tournament_k: int = 3,
+    explore_prob: float = 0.25,
+    seed: int = 0,
+    max_evaluations: int | None = None,
+    seed_candidates: list[Candidate] | None = None,
+    greedy: OptimizationResult | None = None,
+) -> SearchResult:
+    """Run the (mu + lambda) evolutionary mapping search.
+
+    ``evaluator`` is the shared :data:`~repro.core.partitioner.Evaluator`;
+    when it exposes ``evaluate_population`` (:class:`SimEvaluator` does)
+    each generation is priced with the stacked population path of
+    :func:`repro.neuromorphic.timestep.simulate_population`.
+    ``max_evaluations`` caps total candidate pricings (iso-evaluation
+    comparisons against the greedy walk); ``greedy`` feeds the accepted
+    §VI-B moves into the initial population.  Deterministic for a fixed
+    ``seed`` and evaluator.
+    """
+    rng = np.random.default_rng(seed)
+    pop = list(seed_candidates if seed_candidates is not None else
+               seeded_population(net, profile, size=population_size, rng=rng,
+                                 greedy=greedy))
+    if not pop:
+        raise ValueError("empty initial population")
+    if max_evaluations is not None:
+        pop = pop[:max(1, max_evaluations)]
+    reports = _evaluate(evaluator, pop)
+    evals_used = len(pop)
+    seed_best_time = min(r.time_per_step for r in reports)
+    # every phenotype ever priced, across generations
+    tried = {_phenotype(c) for c in pop}
+
+    order = sorted(range(len(pop)), key=lambda k: _fitness(reports[k]))
+    pop = [pop[k] for k in order]
+    reports = [reports[k] for k in order]
+
+    history = [GenStats(generation=0,
+                        best_time=reports[0].time_per_step,
+                        best_energy=reports[0].energy_per_step,
+                        mean_time=float(np.mean([r.time_per_step
+                                                 for r in reports])),
+                        n_evals=evals_used)]
+
+    for gen in range(1, generations + 1):
+        n_off = population_size
+        if max_evaluations is not None:
+            n_off = min(n_off, max_evaluations - evals_used)
+        if n_off <= 0:
+            break
+        offspring: list[Candidate] = []
+        for _ in range(n_off):
+            i = _tournament(reports, tournament_k, rng)
+            child = mutate(pop[i], reports[i], net, profile, rng,
+                           explore_prob=explore_prob)
+            for _ in range(4):          # don't waste budget on repeats
+                if _phenotype(child) not in tried:
+                    break
+                child = mutate(pop[i], reports[i], net, profile, rng,
+                               explore_prob=explore_prob)
+            tried.add(_phenotype(child))
+            offspring.append(child)
+        off_reports = _evaluate(evaluator, offspring)
+        evals_used += len(offspring)
+
+        # (mu + lambda) elitist survival over unique candidates
+        all_c = pop + offspring
+        all_r = reports + off_reports
+        order = sorted(range(len(all_c)), key=lambda k: _fitness(all_r[k]))
+        pop, reports, seen = [], [], set()
+        for k in order:
+            if _phenotype(all_c[k]) in seen:
+                continue
+            seen.add(_phenotype(all_c[k]))
+            pop.append(all_c[k])
+            reports.append(all_r[k])
+            if len(pop) == population_size:
+                break
+        history.append(GenStats(
+            generation=gen,
+            best_time=reports[0].time_per_step,
+            best_energy=reports[0].energy_per_step,
+            mean_time=float(np.mean([r.time_per_step for r in reports])),
+            n_evals=evals_used))
+
+    best, best_r = pop[0], reports[0]
+    return SearchResult(candidate=best, partition=best.partition(),
+                        mapping=best.mapping(), report=best_r,
+                        history=history, n_evals=evals_used,
+                        seed_best_time=seed_best_time)
+
+
+def greedy_then_evolve(net: SimNetwork, profile: ChipProfile,
+                       evaluator: Evaluator, *,
+                       max_evaluations: int | None = None,
+                       **kw) -> tuple[OptimizationResult, SearchResult]:
+    """The two optimizers end-to-end on one evaluator: run the §VI-B greedy
+    walk, then the evolutionary search seeded from its accepted moves.  With
+    elitism the search result is never worse than the greedy one."""
+    greedy = optimize_partitioning(net, profile, evaluator)
+    evo = evolutionary_search(net, profile, evaluator, greedy=greedy,
+                              max_evaluations=max_evaluations, **kw)
+    return greedy, evo

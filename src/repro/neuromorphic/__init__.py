@@ -15,15 +15,19 @@ from repro.neuromorphic.network import (BatchCounters, SimLayer, SimNetwork,
                                         fc_network, make_inputs,
                                         programmed_fc_network)
 from repro.neuromorphic.partition import Partition, minimal_partition
-from repro.neuromorphic.noc import (Mapping, ordered_mapping, route_batch,
-                                    strided_mapping)
-from repro.neuromorphic.timestep import SimReport, simulate
+from repro.neuromorphic.noc import (Mapping, ordered_mapping, random_mapping,
+                                    route_batch, strided_mapping)
+from repro.neuromorphic.timestep import (PricingCache, SimReport,
+                                         precompute_pricing, price_candidate,
+                                         simulate, simulate_population)
 
 __all__ = [
     "ChipProfile", "akd1000_like", "loihi2_like", "speck_like",
     "BatchCounters", "SimLayer", "SimNetwork", "fc_network", "make_inputs",
     "programmed_fc_network",
     "Partition", "minimal_partition",
-    "Mapping", "ordered_mapping", "route_batch", "strided_mapping",
-    "SimReport", "simulate",
+    "Mapping", "ordered_mapping", "random_mapping", "route_batch",
+    "strided_mapping",
+    "PricingCache", "SimReport", "precompute_pricing", "price_candidate",
+    "simulate", "simulate_population",
 ]

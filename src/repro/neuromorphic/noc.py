@@ -59,6 +59,17 @@ def strided_mapping(part: Partition, profile: ChipProfile) -> Mapping:
                    name="strided")
 
 
+def random_mapping(part: Partition, profile: ChipProfile,
+                   rng: np.random.Generator) -> Mapping:
+    """Uniform random placement — population-seeding diversity for the
+    evolutionary mapping search (:mod:`repro.core.search`)."""
+    n = part.total_cores
+    if n > profile.n_cores:
+        raise ValueError("partition exceeds physical cores")
+    phys = rng.permutation(profile.n_cores)[:n]
+    return Mapping(tuple(int(p) for p in phys), name="random")
+
+
 def cores_per_router(profile: ChipProfile) -> int:
     rows, cols = profile.grid
     return max(1, profile.n_cores // (rows * cols))

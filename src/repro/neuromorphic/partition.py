@@ -41,8 +41,17 @@ class Partition:
         return np.linspace(0, n_neurons, c + 1).astype(int)
 
     def split(self, layer_idx: int, by: int = 1) -> "Partition":
+        """Grow a layer by ``by`` cores — the §VI-B memory/compute move."""
         cores = list(self.cores)
         cores[layer_idx] += by
+        return Partition(tuple(cores))
+
+    def merge(self, layer_idx: int, by: int = 1) -> "Partition":
+        """Shrink a layer by ``by`` cores (coagulation, §VI-A move (c)):
+        fewer cores per layer lowers NoC duplication and active power.  The
+        inverse of :meth:`split`; callers must re-validate the result."""
+        cores = list(self.cores)
+        cores[layer_idx] = max(1, cores[layer_idx] - by)
         return Partition(tuple(cores))
 
     def with_layer(self, layer_idx: int, n_cores: int) -> "Partition":

@@ -27,6 +27,23 @@ Two engines price a workload:
 * ``engine="reference"`` — the original step-major loop, kept so the batched
   engine's outputs and counters can be checked for exact parity
   (``tests/test_sim_equivalence.py``).
+
+The batched engine is split into two phases so optimization loops can share
+work across many candidates:
+
+* :func:`precompute_pricing` runs the functional network once and reduces its
+  ``(T, n_neurons)`` counter maps to per-layer neuron-axis cumulative sums —
+  everything that is independent of (partition, mapping).
+* :func:`price_candidate` prices one (partition, mapping) pair from a cache:
+  per-core segment sums are O(cores) gathers into the cumsums, and the NoC
+  matmuls run against the cached flow/path incidence of
+  :mod:`repro.neuromorphic.noc`.
+* :func:`simulate_population` prices a whole candidate population from one
+  cache, gathering every candidate's segment sums in one stacked indexing
+  operation per counter per layer (the population axis is the leading axis
+  of the stacked boundary array).  Results are bit-identical to per-candidate
+  :func:`simulate` calls — the same cumsums are indexed and the same float op
+  order runs downstream — which :mod:`tests.test_search` asserts.
 """
 
 from __future__ import annotations
@@ -42,7 +59,11 @@ from repro.neuromorphic.noc import (Mapping, NocTraffic, ordered_mapping,
 from repro.neuromorphic.partition import Partition, minimal_partition
 from repro.neuromorphic.platform import ChipProfile
 
-#: Engine used when ``simulate`` is called without an explicit ``engine``.
+#: Engine used when :func:`simulate` is called without an explicit
+#: ``engine=``.  ``"batched"`` is the layer-major, time-batched engine;
+#: ``"reference"`` is the step-major loop kept for parity checking.
+#: ``benchmarks/run.py --engine`` overrides this module attribute globally,
+#: which is the supported way to flip every simulation in a process.
 DEFAULT_ENGINE = "batched"
 
 
@@ -78,20 +99,6 @@ def _segment_sums(per_neuron: np.ndarray, bounds: np.ndarray) -> np.ndarray:
     return csum[bounds[1:]] - csum[bounds[:-1]]
 
 
-def _segment_sums_batch(per_neuron: np.ndarray,
-                        bounds: np.ndarray) -> np.ndarray:
-    """(T, n) -> (T, cores) segment sums in one vectorized pass per layer.
-
-    Same cumulative-sum difference as the per-step :func:`_segment_sums`
-    (bit-identical results, and — unlike ``np.add.reduceat`` — an empty
-    segment correctly sums to 0 when a partition holds more cores than the
-    layer has neurons)."""
-    a = np.asarray(per_neuron, np.float64)
-    csum = np.concatenate([np.zeros((a.shape[0], 1)),
-                           np.cumsum(a, axis=1)], axis=1)
-    return csum[:, bounds[1:]] - csum[:, bounds[:-1]]
-
-
 def _layer_format(layer, profile: ChipProfile) -> bool:
     fmt = layer.weight_format or (
         profile.default_format_conv if layer.kind == "conv"
@@ -121,34 +128,6 @@ def aggregate_layer(counters: CounterMaps, layer_idx: int, part: Partition,
     )
 
 
-def aggregate_layer_batch(counters: BatchCounters, layer_idx: int,
-                          part: Partition, net: SimNetwork,
-                          profile: ChipProfile) -> BatchCoreCounters:
-    """All-timesteps analog of :func:`aggregate_layer`: one segment-sum per
-    counter map instead of T per-step passes."""
-    layer = net.layers[layer_idx]
-    n = layer.n_neurons
-    bounds = part.boundaries(layer_idx, n)
-    sparse = _layer_format(layer, profile)
-    macs = _segment_sums_batch(counters.macs, bounds)
-    fetches_dense = _segment_sums_batch(counters.fetches_dense, bounds)
-    synops = macs if sparse else fetches_dense
-    acts_map = (counters.acts_evented if not profile.synchronous
-                else np.ones_like(counters.macs))
-    c = part.cores[layer_idx]
-    T = counters.macs.shape[0]
-    return BatchCoreCounters(
-        msgs_in=np.broadcast_to(
-            np.asarray(counters.msgs_in, np.float64)[:, None], (T, c)),
-        synops=synops,
-        macs=macs,
-        acts=_segment_sums_batch(acts_map, bounds),
-        msgs_out=_segment_sums_batch(counters.msgs_out, bounds),
-        neurons=np.diff(bounds).astype(np.float64),
-        sparse_format=sparse,
-    )
-
-
 def core_times(cc, neuron_model: str,
                profile: ChipProfile) -> tuple[np.ndarray, np.ndarray]:
     """(memory-stage, compute-stage) time per core of one layer.  Works on
@@ -166,7 +145,20 @@ def core_times(cc, neuron_model: str,
 
 @dataclasses.dataclass
 class SimReport:
-    """Simulation output: performance + M0 metrics + raw per-core arrays."""
+    """Simulation output: performance + M0 metrics + raw per-core arrays.
+
+    ``time_per_step``/``energy_per_step`` are means over the per-step
+    ``times``/``energies`` arrays (for asynchronous platforms a "step" is a
+    sample and ``times`` holds pipeline latencies).  ``max_synops``,
+    ``max_acts`` and ``max_link_load`` are the M0 neurocore-aware intensity
+    metrics: per-step maxima over cores (routers for link load), averaged
+    over steps — the x-axis / floor / traffic terms of the floorline model.
+    The ``per_core_*`` arrays are per-logical-core means over steps in
+    partition order; the §VI-B optimizer and the evolutionary search read
+    them to locate bottleneck layers.  ``bottleneck_stage`` names the term
+    ("memory" / "compute" / "traffic" / "barrier") that set the step time on
+    a plurality of steps.
+    """
 
     time_per_step: float            # mean over steps (timestep duration /
                                     # sample latency for async chips)
@@ -249,17 +241,167 @@ def _finish_report(net, part, T, times, energies, outputs, mean_synops,
     )
 
 
+@dataclasses.dataclass
+class LayerPricing:
+    """Partition/mapping-independent pricing state for one layer: neuron-axis
+    cumulative sums of every counter map, so any core boundary's segment sum
+    is a 2-element gather (same cumulative-sum difference as the per-step
+    :func:`_segment_sums`, identical bits for every partition — and, unlike
+    ``np.add.reduceat``, an empty segment correctly sums to 0 when a
+    partition holds more cores than the layer has neurons)."""
+
+    msgs_in: np.ndarray        # (T,) float64
+    csum_macs: np.ndarray      # (T, n_neurons + 1) float64
+    csum_fetches: np.ndarray   # (T, n_neurons + 1)
+    csum_acts: np.ndarray      # (T, n_neurons + 1) of the profile's acts map
+    csum_msgs: np.ndarray      # (T, n_neurons + 1)
+    n_neurons: int
+    sparse: bool
+
+
+@dataclasses.dataclass
+class PricingCache:
+    """Everything :func:`price_candidate` needs that does not depend on the
+    candidate: the functional outputs plus per-layer :class:`LayerPricing`."""
+
+    outputs: np.ndarray
+    T: int
+    layers: list[LayerPricing]
+
+
+def _neuron_csum(per_neuron: np.ndarray) -> np.ndarray:
+    """(T, n) -> (T, n+1) cumulative sum with a leading zero column; paired
+    with :func:`_seg` it is the batched analog of :func:`_segment_sums`."""
+    a = np.asarray(per_neuron, np.float64)
+    return np.concatenate([np.zeros((a.shape[0], 1)),
+                           np.cumsum(a, axis=1)], axis=1)
+
+
+def precompute_pricing(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
+                       *, precomputed: tuple | None = None) -> PricingCache:
+    """Run the functional network (or reuse a cached ``net.run_batch(xs)``
+    result) and reduce its counter maps to per-layer cumsums.  One cache
+    prices any number of (partition, mapping) candidates."""
+    outputs, all_counters = precomputed or net.run_batch(xs)
+    layers = []
+    for l, counters in enumerate(all_counters):
+        acts_map = (counters.acts_evented if not profile.synchronous
+                    else np.ones_like(counters.macs))
+        layers.append(LayerPricing(
+            msgs_in=np.asarray(counters.msgs_in, np.float64),
+            csum_macs=_neuron_csum(counters.macs),
+            csum_fetches=_neuron_csum(counters.fetches_dense),
+            csum_acts=_neuron_csum(acts_map),
+            csum_msgs=_neuron_csum(counters.msgs_out),
+            n_neurons=net.layers[l].n_neurons,
+            sparse=_layer_format(net.layers[l], profile)))
+    return PricingCache(outputs=outputs, T=int(xs.shape[0]), layers=layers)
+
+
+def _seg(csum: np.ndarray, bounds: np.ndarray) -> np.ndarray:
+    """(T, cores) segment sums from cached cumsums: a two-point gather and
+    subtraction per core boundary."""
+    return csum[:, bounds[1:]] - csum[:, bounds[:-1]]
+
+
+def _seg_population(csum: np.ndarray, bounds_stack: np.ndarray) -> np.ndarray:
+    """Stacked population gather: (T, n+1) cumsums x (K, C+1) padded
+    per-candidate boundaries -> (K, T, C) segment sums for every candidate
+    in one indexing operation.  Padded (repeated) boundaries yield empty
+    zero segments that callers slice away; each candidate's slice carries
+    exactly the bits :func:`_seg` would produce."""
+    g = csum[:, bounds_stack]                       # (T, K, C+1)
+    return np.moveaxis(g[:, :, 1:] - g[:, :, :-1], 1, 0)
+
+
+def _cached_layer_counters(lp: LayerPricing, part: Partition, layer_idx: int,
+                           T: int,
+                           segments: tuple | None = None) -> BatchCoreCounters:
+    """All-timesteps analog of :func:`aggregate_layer`, built from a
+    :class:`LayerPricing` (and optionally pre-gathered
+    ``(macs, fetches, acts, msgs_out)`` segment arrays from the population
+    path)."""
+    bounds = part.boundaries(layer_idx, lp.n_neurons)
+    if segments is None:
+        macs = _seg(lp.csum_macs, bounds)
+        fetches_dense = _seg(lp.csum_fetches, bounds)
+        acts = _seg(lp.csum_acts, bounds)
+        msgs_out = _seg(lp.csum_msgs, bounds)
+    else:
+        macs, fetches_dense, acts, msgs_out = segments
+    c = part.cores[layer_idx]
+    return BatchCoreCounters(
+        msgs_in=np.broadcast_to(lp.msgs_in[:, None], (T, c)),
+        synops=macs if lp.sparse else fetches_dense,
+        macs=macs,
+        acts=acts,
+        msgs_out=msgs_out,
+        neurons=np.diff(bounds).astype(np.float64),
+        sparse_format=lp.sparse,
+    )
+
+
+def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
+                        candidates, *, precomputed: tuple | None = None,
+                        cache: PricingCache | None = None) -> list[SimReport]:
+    """Price many (partition, mapping) candidates from ONE functional run.
+
+    ``candidates`` is an iterable of ``(Partition, Mapping)`` pairs.  The
+    expensive (T, n_neurons) work — the functional network run and the
+    per-layer counter cumsums — happens once (or is reused from ``cache`` /
+    ``precomputed``); each candidate's per-core segment sums are then
+    gathered for the whole population at once (:func:`_seg_population`), and
+    only the small (T, cores) stage/energy/NoC math runs per candidate.
+
+    Every report is bit-identical to the corresponding single-candidate
+    ``simulate(net, xs, profile, part, mapping)`` call with the batched
+    engine: the same cumsums are indexed and the same float op order runs on
+    the gathered segments (asserted by ``tests/test_search.py``).
+    """
+    cands = list(candidates)
+    if not cands:
+        return []
+    cache = cache or precompute_pricing(net, xs, profile,
+                                        precomputed=precomputed)
+    n_layers = len(cache.layers)
+    seg_by_cand: list[list[tuple]] = [[None] * n_layers for _ in cands]
+    for l, lp in enumerate(cache.layers):
+        all_bounds = [p.boundaries(l, lp.n_neurons) for p, _ in cands]
+        c_max = max(len(b) - 1 for b in all_bounds)
+        stack = np.stack([np.pad(b, (0, c_max + 1 - len(b)), mode="edge")
+                          for b in all_bounds])          # (K, c_max + 1)
+        pop_segs = tuple(_seg_population(csum, stack) for csum in
+                         (lp.csum_macs, lp.csum_fetches,
+                          lp.csum_acts, lp.csum_msgs))
+        for k, b in enumerate(all_bounds):
+            c = len(b) - 1
+            seg_by_cand[k][l] = tuple(s[k, :, :c] for s in pop_segs)
+    return [price_candidate(net, profile, cache, p, m,
+                            layer_segments=seg_by_cand[k])
+            for k, (p, m) in enumerate(cands)]
+
+
 def _simulate_batched(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                       part: Partition, mapping: Mapping,
                       precomputed: tuple | None) -> SimReport:
-    """Layer-major engine: every per-step quantity is a (T, ...) array."""
-    outputs, all_counters = precomputed or net.run_batch(xs)
+    """Layer-major engine: one pricing-cache build + one candidate pricing."""
+    cache = precompute_pricing(net, xs, profile, precomputed=precomputed)
+    return price_candidate(net, profile, cache, part, mapping)
 
-    T = xs.shape[0]
-    n_layers = len(net.layers)
+
+def price_candidate(net: SimNetwork, profile: ChipProfile,
+                    cache: PricingCache, part: Partition, mapping: Mapping,
+                    *, layer_segments: list[tuple] | None = None) -> SimReport:
+    """Price one (partition, mapping) candidate from a pricing cache; every
+    per-step quantity is a (T, ...) array."""
+    outputs = cache.outputs
+    T = cache.T
+    n_layers = len(cache.layers)
     n_logical = part.total_cores
 
-    layer_cc = [aggregate_layer_batch(all_counters[l], l, part, net, profile)
+    layer_cc = [_cached_layer_counters(
+                    cache.layers[l], part, l, T,
+                    layer_segments[l] if layer_segments else None)
                 for l in range(n_layers)]
 
     mem_all, act_all = [], []

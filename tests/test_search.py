@@ -1,0 +1,246 @@
+"""Tests for the evolutionary mapping-search subsystem
+(:mod:`repro.core.search`) and the population repricing path
+(:func:`repro.neuromorphic.timestep.simulate_population`)."""
+
+import numpy as np
+import pytest
+
+from repro.core.partitioner import SimEvaluator, optimize_partitioning
+from repro.core.search import (Candidate, decode, decode_population, encode,
+                               encode_population, evolutionary_search,
+                               greedy_then_evolve, mutate, seeded_population)
+from repro.neuromorphic import (Partition, SimLayer, SimNetwork, fc_network,
+                                loihi2_like, make_inputs, minimal_partition,
+                                ordered_mapping, programmed_fc_network,
+                                random_mapping, simulate, simulate_population,
+                                strided_mapping)
+from repro.neuromorphic.network import _exact_density_mask
+from repro.neuromorphic.partition import validate_partition
+
+quick = pytest.mark.quick
+
+
+def fc_workload(sizes=(192, 256, 256, 128), wd=0.6, ad=0.3, steps=3):
+    net = programmed_fc_network(
+        list(sizes), weight_densities=[wd] * (len(sizes) - 1),
+        act_densities=[ad] * (len(sizes) - 1), seed=0,
+        weight_format="sparse")
+    xs = make_inputs(sizes[0], ad, steps, seed=1)
+    return net, xs
+
+
+def conv_workload(steps=3):
+    """conv -> conv -> fc stack, mixed layer kinds for the repricing path."""
+    rng = np.random.default_rng(2)
+    layers = []
+    h = w = 8
+    c_prev = 2
+    for i, c in enumerate((4, 8)):
+        wgt = rng.normal(0, 1 / 3.0, (3, 3, c_prev, c)).astype(np.float32)
+        wgt *= _exact_density_mask(wgt.shape, 0.6, rng)
+        layers.append(SimLayer(name=f"conv{i}", kind="conv", weights=wgt,
+                               stride=2, in_hw=(h, w)))
+        h, w, c_prev = h // 2, w // 2, c
+    wfc = rng.normal(0, 0.3, (h * w * c_prev, 10)).astype(np.float32)
+    layers.append(SimLayer(name="fc", kind="fc", weights=wfc))
+    net = SimNetwork(layers=layers, in_size=8 * 8 * 2)
+    return net, make_inputs(net.in_size, 0.4, steps, seed=3)
+
+
+class TestEncoding:
+    @quick
+    def test_round_trip_exact(self):
+        prof = loihi2_like()
+        net, _ = fc_workload()
+        rng = np.random.default_rng(0)
+        p0 = minimal_partition(net, prof)
+        for part in (p0, p0.split(0).split(0), p0.split(1).split(2)):
+            for mk in (ordered_mapping, strided_mapping,
+                       lambda p, pr: random_mapping(p, pr, rng)):
+                mapping = mk(part, prof)
+                cand = encode(part, mapping, prof.n_cores)
+                p2, m2 = decode(cand)
+                assert p2 == part
+                assert tuple(m2.phys) == tuple(mapping.phys)
+                # fixed-shape genome: every physical slot appears once
+                assert sorted(cand.perm) == list(range(prof.n_cores))
+
+    @quick
+    def test_population_arrays_round_trip(self):
+        prof = loihi2_like()
+        net, _ = fc_workload()
+        rng = np.random.default_rng(1)
+        p0 = minimal_partition(net, prof)
+        cands = [encode(p0.split(int(l)), random_mapping(p0.split(int(l)),
+                                                         prof, rng),
+                        prof.n_cores)
+                 for l in rng.integers(0, len(net.layers), size=5)]
+        cores, perm = encode_population(cands)
+        assert cores.shape == (5, len(net.layers))
+        assert perm.shape == (5, prof.n_cores)
+        assert decode_population(cores, perm) == cands
+
+    @quick
+    def test_split_pulls_next_gene_into_use(self):
+        """A split changes the partition but not the genome's placement
+        genes: the new core is expressed from the existing permutation."""
+        prof = loihi2_like()
+        net, _ = fc_workload()
+        p0 = minimal_partition(net, prof)
+        cand = encode(p0, strided_mapping(p0, prof), prof.n_cores)
+        grown = Candidate(p0.split(0).cores, cand.perm)
+        assert grown.n_logical == cand.n_logical + 1
+        assert grown.mapping().phys[:cand.n_logical] == cand.mapping().phys
+
+
+class TestPopulationRepricing:
+    def _assert_reports_identical(self, r_pop, r_one):
+        for field in ("times", "energies", "per_core_synops", "per_core_acts",
+                      "per_core_msgs_out", "outputs"):
+            assert np.array_equal(getattr(r_pop, field),
+                                  getattr(r_one, field)), field
+        assert r_pop.time_per_step == r_one.time_per_step
+        assert r_pop.energy_per_step == r_one.energy_per_step
+        assert r_pop.max_synops == r_one.max_synops
+        assert r_pop.max_acts == r_one.max_acts
+        assert r_pop.max_link_load == r_one.max_link_load
+        assert r_pop.bottleneck_stage == r_one.bottleneck_stage
+        assert r_pop.metrics == r_one.metrics
+
+    @quick
+    def test_fc_population_matches_simulate_bit_for_bit(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        rng = np.random.default_rng(4)
+        p0 = minimal_partition(net, prof)
+        pairs = [(p0, ordered_mapping(p0, prof)),
+                 (p0.split(0), strided_mapping(p0.split(0), prof)),
+                 (p0.split(1).split(1),
+                  random_mapping(p0.split(1).split(1), prof, rng))]
+        reports = simulate_population(net, xs, prof, pairs)
+        assert len(reports) == len(pairs)
+        for (p, m), rp in zip(pairs, reports):
+            self._assert_reports_identical(
+                rp, simulate(net, xs, prof, p, m, engine="batched"))
+
+    def test_conv_population_matches_simulate(self):
+        net, xs = conv_workload()
+        prof = loihi2_like()
+        parts = [Partition((1, 1, 1)), Partition((2, 4, 2)),
+                 Partition((4, 8, 1))]
+        pairs = [(p, strided_mapping(p, prof)) for p in parts]
+        for (p, m), rp in zip(pairs,
+                              simulate_population(net, xs, prof, pairs)):
+            self._assert_reports_identical(rp, simulate(net, xs, prof, p, m))
+
+    @quick
+    def test_empty_core_segments(self):
+        """Candidates whose padded population gather hits empty segments
+        (more cores than neurons) still price exactly."""
+        net = fc_network([16, 6, 8], weight_density=1.0, seed=19)
+        xs = make_inputs(16, 0.8, 3, seed=20)
+        prof = loihi2_like()
+        pairs = [(Partition((1, 1)), ordered_mapping(Partition((1, 1)),
+                                                     prof)),
+                 (Partition((7, 2)), strided_mapping(Partition((7, 2)),
+                                                     prof))]
+        for (p, m), rp in zip(pairs,
+                              simulate_population(net, xs, prof, pairs)):
+            self._assert_reports_identical(rp, simulate(net, xs, prof, p, m))
+
+    @quick
+    def test_evaluator_counts_and_matches(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        p0 = minimal_partition(net, prof)
+        r_single = ev(p0, strided_mapping(p0, prof))
+        rs = ev.evaluate_population(
+            [(p0, strided_mapping(p0, prof)), (p0, ordered_mapping(p0, prof))])
+        assert ev.n_evals == 3
+        self._assert_reports_identical(rs[0], r_single)
+
+    @quick
+    def test_empty_population(self):
+        net, xs = fc_workload()
+        assert simulate_population(net, xs, loihi2_like(), []) == []
+
+
+class TestSearch:
+    def test_never_worse_than_seed(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        rng = np.random.default_rng(5)
+        seeds = seeded_population(net, prof, size=8, rng=rng)
+        seed_reports = ev.evaluate_population([decode(c) for c in seeds])
+        best_seed_time = min(r.time_per_step for r in seed_reports)
+        res = evolutionary_search(net, prof, ev, population_size=8,
+                                  generations=4, seed=7,
+                                  seed_candidates=seeds)
+        assert res.report.time_per_step <= best_seed_time
+        assert res.seed_best_time == best_seed_time
+        assert validate_partition(net, res.partition, prof)
+
+    def test_never_worse_than_greedy(self):
+        """Elitism + greedy seeding: the pipeline cannot lose to §VI-B."""
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        greedy, evo = greedy_then_evolve(net, prof, ev, population_size=8,
+                                         generations=3, seed=0)
+        assert evo.report.time_per_step <= greedy.report.time_per_step
+
+    @quick
+    def test_fixed_seed_determinism(self):
+        net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
+        prof = loihi2_like()
+        runs = []
+        for _ in range(2):
+            ev = SimEvaluator(net, xs, prof)
+            runs.append(evolutionary_search(net, prof, ev, population_size=6,
+                                            generations=3, seed=11))
+        a, b = runs
+        assert a.candidate == b.candidate
+        assert a.report.time_per_step == b.report.time_per_step
+        assert [g.best_time for g in a.history] == \
+            [g.best_time for g in b.history]
+        assert a.n_evals == b.n_evals
+
+    @quick
+    def test_budget_respected(self):
+        net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        res = evolutionary_search(net, prof, ev, population_size=6,
+                                  generations=50, seed=1,
+                                  max_evaluations=20)
+        assert res.n_evals <= 20
+        assert ev.n_evals == res.n_evals
+
+    @quick
+    def test_mutation_yields_valid_distinct_candidates(self):
+        net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        p0 = minimal_partition(net, prof)
+        cand = encode(p0, strided_mapping(p0, prof), prof.n_cores)
+        report = ev(*decode(cand))
+        rng = np.random.default_rng(3)
+        for _ in range(25):
+            child = mutate(cand, report, net, prof, rng)
+            assert child != cand
+            assert validate_partition(net, child.partition(), prof)
+            assert sorted(child.perm) == list(range(prof.n_cores))
+
+    def test_history_is_monotone_and_counts_evals(self):
+        net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        res = evolutionary_search(net, prof, ev, population_size=6,
+                                  generations=5, seed=2)
+        best = [g.best_time for g in res.history]
+        assert all(t2 <= t1 for t1, t2 in zip(best, best[1:]))
+        evals = [g.n_evals for g in res.history]
+        assert all(e2 > e1 for e1, e2 in zip(evals, evals[1:]))
+        assert res.history[-1].n_evals == res.n_evals
