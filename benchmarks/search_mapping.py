@@ -10,8 +10,10 @@ is its failure mode), while the evolutionary pipeline spends the same
 run (no greedy seeds) gets the full budget B for reference.
 
 Writes ``BENCH_search.json`` at the repo root: best time/energy per
-optimizer at iso-evaluations plus evaluations/sec (the population-repricing
-throughput the batched engine buys).
+optimizer at iso-evaluations, the evolutionary front's knee point, plus a
+population-pricing throughput microbenchmark comparing the NumPy stacked
+path against the jitted ``jax.vmap`` backend at population >= 64 (the
+array-native pipeline's headline number).
 """
 
 from __future__ import annotations
@@ -22,11 +24,38 @@ import time
 
 from benchmarks import workloads as W
 from repro.core.partitioner import SimEvaluator, optimize_partitioning
-from repro.core.search import evolutionary_search
+from repro.core.search import decode, evolutionary_search, seeded_population
 from repro.neuromorphic.noc import ordered_mapping
 from repro.neuromorphic.partition import minimal_partition
+from repro.neuromorphic.timestep import precompute_pricing, simulate_population
 
 BENCH_PATH = "BENCH_search.json"
+
+
+def _pricing_throughput(net, xs, prof, *, pop: int, repeats: int,
+                        seed: int = 0) -> dict:
+    """evals/s of the two population-pricing backends on one fixed
+    population (>= 64 candidates unless the workload cannot seed that many),
+    measured over ``repeats`` full repricings from a warm cache."""
+    import numpy as np
+    cache = precompute_pricing(net, xs, prof)
+    rng = np.random.default_rng(seed)
+    pairs = [decode(c) for c in seeded_population(net, prof, size=pop,
+                                                  rng=rng)]
+    out = {"pop_size": len(pairs)}
+    # warm both paths (vmap: jit compile; numpy: flow-matrix caches)
+    simulate_population(net, xs, prof, pairs, cache=cache, backend="numpy")
+    simulate_population(net, xs, prof, pairs, cache=cache, backend="vmap")
+    for backend in ("numpy", "vmap"):
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            simulate_population(net, xs, prof, pairs, cache=cache,
+                                backend=backend)
+        dt = time.perf_counter() - t0
+        out[f"{backend}_evals_per_sec"] = repeats * len(pairs) / max(dt, 1e-9)
+    out["vmap_speedup"] = (out["vmap_evals_per_sec"]
+                           / out["numpy_evals_per_sec"])
+    return out
 
 
 def _head_to_head(net, xs, prof, *, population_size: int, generations: int,
@@ -62,8 +91,12 @@ def _head_to_head(net, xs, prof, *, population_size: int, generations: int,
         generations=generations, seed=seed, max_evaluations=budget)
     t_cold = time.perf_counter() - t0
 
+    knee = evo.knee()
     return {
         "budget_evals": budget,
+        "front_size": len(evo.front),
+        "knee_time": knee[1].time_per_step if knee else None,
+        "knee_energy": knee[1].energy_per_step if knee else None,
         "baseline_time": base.time_per_step,
         "greedy_time": greedy.report.time_per_step,
         "greedy_energy": greedy.report.energy_per_step,
@@ -90,17 +123,23 @@ def run(quick: bool = False) -> dict:
     steps = 2 if smoke else (3 if quick else 6)
     pop = 8 if smoke else (12 if quick else 24)
     gens = 2 if smoke else (5 if quick else 12)
+    price_reps = 2 if smoke else (5 if quick else 10)
 
     out = {}
     s5, prof = W.s5_sim(weight_density=0.5, seed=0, weight_format="sparse")
     xs = W.sim_inputs(s5, 0.3, steps, seed=2)
     out["s5"] = _head_to_head(s5, xs, prof, population_size=pop,
                               generations=gens, seed=0)
+    out["s5"]["pricing"] = _pricing_throughput(s5, xs, prof, pop=64,
+                                               repeats=price_reps)
 
     pnet, pprof = W.pilotnet_sim(weight_density=0.6, seed=1)
     pxs = W.sim_inputs(pnet, 0.3, max(steps - 1, 2), seed=3)
     out["pilotnet"] = _head_to_head(pnet, pxs, pprof, population_size=pop,
                                     generations=gens, seed=0)
+    out["pilotnet"]["pricing"] = _pricing_throughput(pnet, pxs, pprof,
+                                                     pop=64,
+                                                     repeats=price_reps)
 
     with open(BENCH_PATH, "w") as f:
         json.dump(out, f, indent=1)
@@ -123,5 +162,17 @@ def report(res: dict) -> str:
             f"{r['greedy_evals_per_sec']:7.1f} evals/s, population "
             f"{r['evo_evals_per_sec']:7.1f} evals/s "
             f"(cold-start evo: {r['cold_time']:.1f})")
+        if r.get("knee_time") is not None:
+            lines.append(
+                f"  {'':8s} front: {r['front_size']} pts, knee "
+                f"(time={r['knee_time']:.1f}, "
+                f"energy={r['knee_energy']:.1f})")
+        pr = r.get("pricing")
+        if pr:
+            lines.append(
+                f"  {'':8s} population pricing @ pop={pr['pop_size']}: "
+                f"numpy {pr['numpy_evals_per_sec']:8.1f} evals/s, "
+                f"vmap {pr['vmap_evals_per_sec']:8.1f} evals/s "
+                f"-> {pr['vmap_speedup']:.2f}x")
     lines.append(f"  wrote {BENCH_PATH}")
     return "\n".join(lines)

@@ -16,9 +16,10 @@ _LAZY = {name: "repro.core.partitioner" for name in (
     "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator",
     "can_split", "optimize_partitioning")}
 _LAZY.update({name: "repro.core.search" for name in (
-    "Candidate", "SearchResult", "decode", "decode_population", "encode",
+    "Candidate", "EpsParetoArchive", "MoveTables", "Population",
+    "SearchResult", "decode", "decode_population", "encode",
     "encode_population", "evolutionary_search", "greedy_then_evolve",
-    "seeded_population")})
+    "knee_point", "move_tables", "pareto_ranks", "seeded_population")})
 
 
 def __getattr__(name):
@@ -36,7 +37,8 @@ __all__ = [
     "LoadStats", "WorkloadMetrics", "proxy_gap",
     "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator", "can_split",
     "optimize_partitioning",
-    "Candidate", "SearchResult", "decode", "decode_population", "encode",
+    "Candidate", "EpsParetoArchive", "MoveTables", "Population",
+    "SearchResult", "decode", "decode_population", "encode",
     "encode_population", "evolutionary_search", "greedy_then_evolve",
-    "seeded_population",
+    "knee_point", "move_tables", "pareto_ranks", "seeded_population",
 ]

@@ -63,13 +63,22 @@ class SimEvaluator:
     With ``engine="reference"`` candidates are priced by the step-major
     engine (no cache); results are identical, just slower — useful for
     auditing the cache path at small scale.
+
+    ``population_backend`` selects how :meth:`evaluate_population` prices a
+    generation: ``"numpy"`` (stacked gathers + per-candidate NumPy math,
+    bit-identical to ``simulate``) or ``"vmap"`` (one jitted ``jax.vmap``
+    over the padded population axis — float64-roundoff-identical, several
+    times the pricing throughput at population >= 64; see
+    ``BENCH_search.json``).
     """
 
     def __init__(self, net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
-                 *, engine: str | None = None, cache=None):
+                 *, engine: str | None = None, cache=None,
+                 population_backend: str = "numpy"):
         from repro.neuromorphic import timestep
         self.net, self.xs, self.profile = net, xs, profile
         self.engine = engine or timestep.DEFAULT_ENGINE
+        self.population_backend = population_backend
         # ``cache=`` shares one PricingCache between evaluators that only
         # differ in their evaluation counters (e.g. benchmark arms)
         self.cache = (cache or precompute_pricing(net, xs, profile)
@@ -86,12 +95,14 @@ class SimEvaluator:
 
     def evaluate_population(self, candidates) -> list[SimReport]:
         """Price a list of (partition, mapping) pairs; one stacked gather
-        per layer when the pricing cache is live."""
+        per layer (or one jitted vmap program, ``population_backend=
+        "vmap"``) when the pricing cache is live."""
         cands = list(candidates)
         self.n_evals += len(cands)
         if self.cache is not None:
             return simulate_population(self.net, self.xs, self.profile,
-                                       cands, cache=self.cache)
+                                       cands, cache=self.cache,
+                                       backend=self.population_backend)
         return [simulate(self.net, self.xs, self.profile, p, m,
                          engine=self.engine) for p, m in cands]
 

@@ -11,10 +11,17 @@ mapping) hypotheses at once; what made it affordable *here* is the batched
 engine's pricing split: one functional run + per-layer counter cumsums
 (:func:`repro.neuromorphic.timestep.precompute_pricing`) price an entire
 generation with one stacked gather per layer
-(:func:`repro.neuromorphic.timestep.simulate_population`).
+(:func:`repro.neuromorphic.timestep.simulate_population`) — or, with the
+``vmap`` backend, as one jitted ``jax.vmap`` over the padded population axis
+(:func:`repro.neuromorphic.timestep.price_population_vmap`).
 
-Candidates are encoded as fixed-shape arrays regardless of how many cores a
-partition uses:
+The genome representation is **tensor-first**: a generation lives in a
+:class:`Population` — a ``(K, n_layers)`` core-count matrix plus a
+``(K, n_slots)`` permutation matrix — and mutation, tournament selection,
+nondomination ranking, and elitist survival all operate on the stacked
+arrays (feasibility checks are table lookups into a precomputed
+:class:`MoveTables`, not per-candidate ``validate_partition`` walks).
+:class:`Candidate` remains the per-individual view:
 
 * ``cores`` — per-layer core counts, shape ``(n_layers,)``;
 * ``perm``  — a permutation of ALL physical core slots, shape
@@ -27,10 +34,17 @@ The generation loop is (mu + lambda) elitist: tournament parent selection,
 floorline-guided mutation (the parent's bottleneck stage picks the move —
 memory/compute -> split the hot layer, traffic -> re-map or coagulate, with
 an exploration probability of a uniformly random move), then survival of the
-``population_size`` best unique candidates.  Elitism plus floorline-informed
+``population_size`` best unique candidates ordered by **(nondomination rank,
+time, energy)**.  The rank ordering replaces the PR-2 lexicographic
+tie-break: equal-time candidates trade off against energy on a (time,
+energy) Pareto front, maintained across the whole run by an
+epsilon-dominance archive (:class:`EpsParetoArchive`) and returned as
+``SearchResult.front``; :func:`knee_point` names its best balanced point.
+Because the lexicographic (time, energy) minimum is always nondominated, the
+rank ordering preserves PR 2's guarantees: elitism plus floorline-informed
 seeding (the greedy optimizer's accepted moves are injected into the initial
-population) guarantee the search never returns a candidate worse than its
-best seed — and never worse than the greedy result when seeded from it.
+population) still guarantee the search never returns a candidate worse than
+its best seed — and never worse than the greedy result when seeded from it.
 """
 
 from __future__ import annotations
@@ -40,13 +54,13 @@ import dataclasses
 import numpy as np
 
 from repro.core.partitioner import (Evaluator, OptimizationResult,
-                                    _argmax_layer, can_split,
                                     optimize_partitioning)
 from repro.neuromorphic.network import SimNetwork
 from repro.neuromorphic.noc import (Mapping, ordered_mapping, random_mapping,
                                     strided_mapping)
-from repro.neuromorphic.partition import (Partition, minimal_partition,
-                                          validate_partition)
+from repro.neuromorphic.partition import (Partition, layer_fits,
+                                          max_cores_for_layer,
+                                          minimal_partition)
 from repro.neuromorphic.platform import ChipProfile
 from repro.neuromorphic.timestep import SimReport
 
@@ -89,26 +103,205 @@ def decode(cand: Candidate) -> tuple[Partition, Mapping]:
     return cand.partition(), cand.mapping()
 
 
-def _phenotype(cand: Candidate) -> tuple:
-    """Dedup key: only the expressed genes.  Two genomes that differ in the
-    unexpressed permutation tail decode to the same (partition, mapping)
-    and must not be priced twice or hold two elitist slots."""
-    return (cand.cores, cand.perm[:cand.n_logical])
+# ------------------------------------------------------------- population
+
+@dataclasses.dataclass
+class Population:
+    """Tensor-first genome bank: row k of ``cores``/``perm`` IS candidate k.
+
+    This is the representation the search loop mutates and selects on —
+    and the interchange form for storage/transport.  :meth:`candidate` /
+    :meth:`candidates` materialize per-individual :class:`Candidate` views
+    on demand; :meth:`pairs` decodes the whole bank into the
+    ``(Partition, Mapping)`` pairs the pricing backends consume.
+    """
+
+    cores: np.ndarray   # (K, n_layers) int32
+    perm: np.ndarray    # (K, n_slots) int32
+
+    def __post_init__(self):
+        self.cores = np.asarray(self.cores, np.int32)
+        self.perm = np.asarray(self.perm, np.int32)
+
+    def __len__(self) -> int:
+        return int(self.cores.shape[0])
+
+    @property
+    def n_logical(self) -> np.ndarray:
+        """(K,) expressed-gene counts."""
+        return self.cores.sum(axis=1)
+
+    @staticmethod
+    def from_candidates(cands: list[Candidate]) -> "Population":
+        return Population(np.asarray([c.cores for c in cands], np.int32),
+                          np.asarray([c.perm for c in cands], np.int32))
+
+    def candidate(self, k: int) -> Candidate:
+        return Candidate(tuple(int(x) for x in self.cores[k]),
+                         tuple(int(x) for x in self.perm[k]))
+
+    def candidates(self) -> list[Candidate]:
+        return [self.candidate(k) for k in range(len(self))]
+
+    def pairs(self) -> list[tuple[Partition, Mapping]]:
+        out = []
+        n_log = self.n_logical
+        for k in range(len(self)):
+            out.append((Partition(tuple(int(x) for x in self.cores[k])),
+                        Mapping(tuple(int(x) for x in
+                                      self.perm[k, :n_log[k]]),
+                                name="evolved")))
+        return out
+
+    @staticmethod
+    def row_key(cores_row: np.ndarray, perm_row: np.ndarray) -> bytes:
+        """Expressed-genes dedup key for one genome row: two genomes that
+        differ only in the unexpressed permutation tail decode to the same
+        (partition, mapping) and must not be priced twice or hold two
+        elitist slots.  The single source of the key format —
+        ``phenotype`` and the offspring loop both go through here, so
+        they can never diverge."""
+        return (cores_row.tobytes()
+                + perm_row[:int(cores_row.sum())].tobytes())
+
+    def phenotype(self, k: int) -> bytes:
+        return self.row_key(self.cores[k], self.perm[k])
+
+    def take(self, idx) -> "Population":
+        return Population(self.cores[idx], self.perm[idx])
+
+    @staticmethod
+    def concatenate(a: "Population", b: "Population") -> "Population":
+        return Population(np.concatenate([a.cores, b.cores]),
+                          np.concatenate([a.perm, b.perm]))
 
 
 def encode_population(cands: list[Candidate]) -> tuple[np.ndarray, np.ndarray]:
-    """Population -> ((K, n_layers) core counts, (K, n_cores_phys) perms),
-    the fixed-shape array interchange form (storage, transport, or future
-    array-level genome operators; the search itself mutates
-    :class:`Candidate` objects)."""
-    cores = np.asarray([c.cores for c in cands], np.int32)
-    perm = np.asarray([c.perm for c in cands], np.int32)
-    return cores, perm
+    """Population -> ((K, n_layers) core counts, (K, n_cores_phys) perms):
+    a thin view of :meth:`Population.from_candidates` kept for the original
+    array-pair interchange API."""
+    pop = Population.from_candidates(cands)
+    return pop.cores, pop.perm
 
 
 def decode_population(cores: np.ndarray, perm: np.ndarray) -> list[Candidate]:
-    return [Candidate(tuple(int(x) for x in cr), tuple(int(x) for x in pr))
-            for cr, pr in zip(cores, perm)]
+    return Population(cores, perm).candidates()
+
+
+# ------------------------------------------------------------ move tables
+
+@dataclasses.dataclass(frozen=True)
+class MoveTables:
+    """Precomputed per-layer feasibility: ``feasible[l, c]`` is True iff
+    assigning ``c`` cores to layer ``l`` satisfies the chip's granularity
+    and per-core capacity limits.  Genome-level moves and row validation
+    become table lookups — no :class:`Partition` objects, no per-candidate
+    capacity walks."""
+
+    feasible: np.ndarray    # (n_layers, n_cores_phys + 2) bool
+    n_cores_phys: int
+
+    def valid_rows(self, cores: np.ndarray) -> np.ndarray:
+        """(K,) validity of each core-count row (the vectorized
+        ``validate_partition``)."""
+        cores = np.asarray(cores)
+        c = np.clip(cores, 0, self.feasible.shape[1] - 1)
+        ok = self.feasible[np.arange(cores.shape[1])[None, :], c]
+        return ok.all(axis=1) & (cores.sum(axis=1) <= self.n_cores_phys)
+
+
+def move_tables(net: SimNetwork, profile: ChipProfile) -> MoveTables:
+    feas = np.zeros((len(net.layers), profile.n_cores + 2), bool)
+    for l, layer in enumerate(net.layers):
+        cap = min(max_cores_for_layer(net, l), profile.n_cores)
+        if not profile.allow_partitioning:
+            cap = 1
+        for c in range(1, cap + 1):
+            feas[l, c] = layer_fits(layer, c, profile)
+    return MoveTables(feasible=feas, n_cores_phys=profile.n_cores)
+
+
+# ---------------------------------------------------------------- fronts
+
+def pareto_ranks(times: np.ndarray, energies: np.ndarray) -> np.ndarray:
+    """(K,) nondomination rank per candidate (0 = Pareto-optimal) under
+    (time, energy) minimization.  The lexicographic (time, energy) minimum
+    is always rank 0, so ordering by ``(rank, time, energy)`` preserves the
+    PR-2 elitism guarantees while letting energy-efficient candidates
+    survive alongside equal-rank faster ones."""
+    t = np.asarray(times, np.float64)
+    e = np.asarray(energies, np.float64)
+    n = t.size
+    # dominated_by[i, j]: candidate j dominates candidate i
+    dominated_by = ((t[None, :] <= t[:, None]) & (e[None, :] <= e[:, None])
+                    & ((t[None, :] < t[:, None]) | (e[None, :] < e[:, None])))
+    ranks = np.zeros(n, int)
+    remaining = np.ones(n, bool)
+    r = 0
+    while remaining.any():
+        dom = (dominated_by & remaining[None, :]).sum(axis=1)
+        frontier = remaining & (dom == 0)
+        ranks[frontier] = r
+        remaining &= ~frontier
+        r += 1
+    return ranks
+
+
+def knee_point(times, energies) -> int:
+    """Index of the knee of a (time, energy) front: the point closest (in
+    normalized objective space) to the ideal corner — the paper's "don't
+    burn energy for no timing benefit" guard turned into a front pick."""
+    t = np.asarray(times, np.float64)
+    e = np.asarray(energies, np.float64)
+    tn = (t - t.min()) / max(np.ptp(t), 1e-30)
+    en = (e - e.min()) / max(np.ptp(e), 1e-30)
+    return int(np.argmin(np.hypot(tn, en)))
+
+
+class EpsParetoArchive:
+    """Epsilon-dominance (time, energy) Pareto archive (Laumanns-style).
+
+    A point enters iff no member multiplicatively epsilon-dominates it
+    (``q.time <= p.time*(1+eps)`` and ``q.energy <= p.energy*(1+eps)``);
+    on entry, members it plainly dominates are evicted.  The epsilon grid
+    bounds the archive to O((log range / log(1+eps))) points, so it can
+    absorb every candidate the search ever prices."""
+
+    def __init__(self, eps: float = 0.01):
+        self.eps = float(eps)
+        self._items: list[dict] = []
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def add(self, time: float, energy: float, cores: np.ndarray,
+            perm: np.ndarray, report: SimReport) -> bool:
+        one_eps = 1.0 + self.eps
+        for it in self._items:
+            if it["time"] <= time * one_eps and \
+                    it["energy"] <= energy * one_eps:
+                return False
+        self._items = [it for it in self._items
+                       if not (time <= it["time"] and energy <= it["energy"])]
+        self._items.append(dict(time=float(time), energy=float(energy),
+                                cores=np.array(cores, np.int32),
+                                perm=np.array(perm, np.int32),
+                                report=report))
+        return True
+
+    def update(self, pop: Population, times: np.ndarray,
+               energies: np.ndarray, reports: list[SimReport]) -> None:
+        for k in range(len(pop)):
+            self.add(times[k], energies[k], pop.cores[k], pop.perm[k],
+                     reports[k])
+
+    def front(self) -> tuple[list[Candidate], list[SimReport]]:
+        """Archive contents sorted by time: (candidates, reports)."""
+        items = sorted(self._items, key=lambda it: (it["time"], it["energy"]))
+        cands = [Candidate(tuple(int(x) for x in it["cores"]),
+                           tuple(int(x) for x in it["perm"]))
+                 for it in items]
+        return cands, [it["report"] for it in items]
 
 
 @dataclasses.dataclass
@@ -120,6 +313,7 @@ class GenStats:
     best_energy: float
     mean_time: float
     n_evals: int            # cumulative evaluations after this generation
+    front_size: int = 0     # epsilon-archive size after this generation
 
 
 @dataclasses.dataclass
@@ -131,16 +325,21 @@ class SearchResult:
     history: list[GenStats]
     n_evals: int
     seed_best_time: float   # best initial-population time (never-worse bound)
+    #: epsilon-nondominated (time, energy) candidates, sorted by time
+    front: list[Candidate] = dataclasses.field(default_factory=list)
+    front_reports: list[SimReport] = dataclasses.field(default_factory=list)
+
+    def knee(self) -> tuple[Candidate, SimReport] | None:
+        """The front's knee point (None when the front is empty)."""
+        if not self.front:
+            return None
+        i = knee_point([r.time_per_step for r in self.front_reports],
+                       [r.energy_per_step for r in self.front_reports])
+        return self.front[i], self.front_reports[i]
 
 
-def _fitness(r: SimReport) -> tuple[float, float]:
-    """Minimize time first, energy as the tie-break (the paper's energy
-    guard: equal-time candidates should not burn more power)."""
-    return (r.time_per_step, r.energy_per_step)
-
-
-def _evaluate(evaluator: Evaluator, cands: list[Candidate]) -> list[SimReport]:
-    pairs = [decode(c) for c in cands]
+def _evaluate(evaluator: Evaluator, pop: Population) -> list[SimReport]:
+    pairs = pop.pairs()
     ep = getattr(evaluator, "evaluate_population", None)
     if ep is not None:
         return ep(pairs)
@@ -162,6 +361,7 @@ def seeded_population(net: SimNetwork, profile: ChipProfile, *, size: int,
     mappings up to ``size``.
     """
     P = profile.n_cores
+    tables = move_tables(net, profile)
     seeds: list[Candidate] = []
     if greedy is not None:
         seeds.append(encode(greedy.partition, greedy.mapping, P))
@@ -180,14 +380,17 @@ def seeded_population(net: SimNetwork, profile: ChipProfile, *, size: int,
             unique.append(c)
     unique = unique[:size]
 
+    n_layers = len(net.layers)
     guard = 0
     while len(unique) < size and guard < 50 * size:
         guard += 1
-        part = p0
-        for _ in range(int(rng.integers(0, len(net.layers) * 2 + 1))):
-            l = int(rng.integers(len(net.layers)))
-            if can_split(net, part, l, profile):
-                part = part.split(l)
+        cores = np.asarray(p0.cores, np.int32).copy()
+        for _ in range(int(rng.integers(0, n_layers * 2 + 1))):
+            l = int(rng.integers(n_layers))
+            if tables.feasible[l, cores[l] + 1] \
+                    and cores.sum() + 1 <= P:
+                cores[l] += 1
+        part = Partition(tuple(int(x) for x in cores))
         c = encode(part, random_mapping(part, profile, rng), P)
         if c not in unique:
             unique.append(c)
@@ -196,79 +399,106 @@ def seeded_population(net: SimNetwork, profile: ChipProfile, *, size: int,
 
 # ---------------------------------------------------------------- mutations
 
-def _swap_move(cand: Candidate, rng: np.random.Generator) -> Candidate:
+def _swap_rows(cores_row: np.ndarray, perm_row: np.ndarray,
+               rng: np.random.Generator) -> tuple[np.ndarray, np.ndarray]:
     """Swap one expressed mapping gene with any other gene — re-places a
     logical core onto a different physical slot (possibly one currently
     unused).  Always yields a valid candidate."""
-    perm = list(cand.perm)
-    n = cand.n_logical
+    perm = perm_row.copy()
+    n = int(cores_row.sum())
     i = int(rng.integers(0, max(n, 1)))
-    j = int(rng.integers(0, len(perm)))
+    j = int(rng.integers(0, perm.shape[0]))
     if i == j:
-        j = (j + 1) % len(perm)
+        j = (j + 1) % perm.shape[0]
     perm[i], perm[j] = perm[j], perm[i]
-    return Candidate(cand.cores, tuple(perm))
+    return cores_row, perm
 
 
-def _split_move(cand: Candidate, per_core: np.ndarray, net: SimNetwork,
-                profile: ChipProfile,
-                rng: np.random.Generator) -> Candidate | None:
+def _hot_layer(cores_row: np.ndarray, per_core: np.ndarray) -> int:
+    """Layer owning the max-loaded core (the M0 bottleneck unit), from the
+    stacked genome row."""
+    core_layers = np.repeat(np.arange(cores_row.shape[0]), cores_row)
+    return int(core_layers[int(np.argmax(per_core))])
+
+
+def _split_rows(cores_row: np.ndarray, perm_row: np.ndarray, hot: int,
+                rng: np.random.Generator, tables: MoveTables,
+                ) -> tuple[np.ndarray, np.ndarray] | None:
     """Split the bottleneck layer (or, failing that, a random splittable
-    one) — the memory/compute assumption's move, locating the hot layer by
-    the greedy walk's own rule."""
-    part = cand.partition()
-    hot = _argmax_layer(per_core, part)
-    layers = [hot] + [int(l) for l in rng.permutation(len(part.cores))]
-    for l in layers:
-        if can_split(net, part, l, profile):
-            return Candidate(part.split(l).cores, cand.perm)
+    one) — the memory/compute assumption's move, gated by the feasibility
+    table instead of a partition-object walk."""
+    if cores_row.sum() + 1 > tables.n_cores_phys:
+        return None
+    for l in [hot] + [int(x) for x in rng.permutation(cores_row.shape[0])]:
+        if tables.feasible[l, cores_row[l] + 1]:
+            cores = cores_row.copy()
+            cores[l] += 1
+            return cores, perm_row
     return None
 
 
-def _merge_move(cand: Candidate, net: SimNetwork, profile: ChipProfile,
-                rng: np.random.Generator) -> Candidate | None:
+def _merge_rows(cores_row: np.ndarray, perm_row: np.ndarray,
+                rng: np.random.Generator, tables: MoveTables,
+                ) -> tuple[np.ndarray, np.ndarray] | None:
     """Coagulate a multi-core layer (§VI-A move (c): fewer cores -> less
     message duplication and active power)."""
-    part = cand.partition()
-    for l in rng.permutation(len(part.cores)):
-        if part.cores[int(l)] > 1:
-            merged = part.merge(int(l))
-            if validate_partition(net, merged, profile):
-                return Candidate(merged.cores, cand.perm)
+    for l in rng.permutation(cores_row.shape[0]):
+        l = int(l)
+        if cores_row[l] > 1 and tables.feasible[l, cores_row[l] - 1]:
+            cores = cores_row.copy()
+            cores[l] -= 1
+            return cores, perm_row
     return None
 
 
-def mutate(cand: Candidate, report: SimReport, net: SimNetwork,
-           profile: ChipProfile, rng: np.random.Generator, *,
-           explore_prob: float = 0.25) -> Candidate:
-    """Floorline-guided mutation: the parent's bottleneck stage selects the
-    move family (§VI-A a/b/c), with probability ``explore_prob`` of a
-    uniformly random stage instead.  Falls back across families until a
-    valid, different candidate emerges (a gene swap always is)."""
+def _mutate_rows(cores_row: np.ndarray, perm_row: np.ndarray,
+                 report: SimReport, rng: np.random.Generator,
+                 tables: MoveTables, *, explore_prob: float,
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Floorline-guided mutation on one genome row: the parent's bottleneck
+    stage selects the move family (§VI-A a/b/c), with probability
+    ``explore_prob`` of a uniformly random stage instead.  Falls back
+    across families until a valid, different row pair emerges (a gene swap
+    always is)."""
     stage = report.bottleneck_stage
     if stage not in _STAGES or rng.random() < explore_prob:
         stage = _STAGES[int(rng.integers(len(_STAGES)))]
     for _ in range(4):
         if stage == "memory":
-            child = _split_move(cand, report.per_core_synops, net, profile,
-                                rng)
+            child = _split_rows(cores_row, perm_row,
+                                _hot_layer(cores_row, report.per_core_synops),
+                                rng, tables)
         elif stage == "compute":
-            child = _split_move(cand, report.per_core_acts, net, profile, rng)
+            child = _split_rows(cores_row, perm_row,
+                                _hot_layer(cores_row, report.per_core_acts),
+                                rng, tables)
         elif rng.random() < 0.5:
-            child = _merge_move(cand, net, profile, rng)
+            child = _merge_rows(cores_row, perm_row, rng, tables)
         else:
-            child = _swap_move(cand, rng)
-        if (child is not None and child != cand
-                and validate_partition(net, child.partition(), profile)):
-            return child
+            child = _swap_rows(cores_row, perm_row, rng)
+        if child is not None:
+            c, p = child
+            changed = (not np.array_equal(c, cores_row)
+                       or not np.array_equal(p, perm_row))
+            if changed and tables.valid_rows(c[None, :])[0]:
+                return c, p
         stage = _STAGES[int(rng.integers(len(_STAGES)))]
-    return _swap_move(cand, rng)
+    return _swap_rows(cores_row, perm_row, rng)
 
 
-def _tournament(reports: list[SimReport], k: int,
-                rng: np.random.Generator) -> int:
-    idx = rng.integers(0, len(reports), size=max(1, k))
-    return int(min(idx, key=lambda i: _fitness(reports[int(i)])))
+def mutate(cand: Candidate, report: SimReport, net: SimNetwork,
+           profile: ChipProfile, rng: np.random.Generator, *,
+           explore_prob: float = 0.25,
+           tables: MoveTables | None = None) -> Candidate:
+    """Candidate-level wrapper over the row mutation (kept for the public
+    API; the search loop mutates :class:`Population` rows directly)."""
+    tables = tables or move_tables(net, profile)
+    cores, perm = _mutate_rows(np.asarray(cand.cores, np.int32),
+                               np.asarray(cand.perm, np.int32),
+                               report, rng, tables,
+                               explore_prob=explore_prob)
+    return Candidate(tuple(int(x) for x in cores),
+                     tuple(int(x) for x in perm))
 
 
 # ------------------------------------------------------------------- search
@@ -286,89 +516,125 @@ def evolutionary_search(
     max_evaluations: int | None = None,
     seed_candidates: list[Candidate] | None = None,
     greedy: OptimizationResult | None = None,
+    pareto_eps: float = 0.01,
 ) -> SearchResult:
-    """Run the (mu + lambda) evolutionary mapping search.
+    """Run the (mu + lambda) evolutionary mapping search, tensor-first.
 
     ``evaluator`` is the shared :data:`~repro.core.partitioner.Evaluator`;
     when it exposes ``evaluate_population`` (:class:`SimEvaluator` does)
     each generation is priced with the stacked population path of
-    :func:`repro.neuromorphic.timestep.simulate_population`.
-    ``max_evaluations`` caps total candidate pricings (iso-evaluation
-    comparisons against the greedy walk); ``greedy`` feeds the accepted
-    §VI-B moves into the initial population.  Deterministic for a fixed
-    ``seed`` and evaluator.
+    :func:`repro.neuromorphic.timestep.simulate_population` (or its jitted
+    ``vmap`` backend).  ``max_evaluations`` caps total candidate pricings
+    (iso-evaluation comparisons against the greedy walk); ``greedy`` feeds
+    the accepted §VI-B moves into the initial population; ``pareto_eps``
+    sets the epsilon-dominance grid of the (time, energy) archive returned
+    as ``SearchResult.front``.  Deterministic for a fixed ``seed`` and
+    evaluator.
     """
     rng = np.random.default_rng(seed)
-    pop = list(seed_candidates if seed_candidates is not None else
-               seeded_population(net, profile, size=population_size, rng=rng,
-                                 greedy=greedy))
-    if not pop:
+    tables = move_tables(net, profile)
+    cands = list(seed_candidates if seed_candidates is not None else
+                 seeded_population(net, profile, size=population_size,
+                                   rng=rng, greedy=greedy))
+    if not cands:
         raise ValueError("empty initial population")
     if max_evaluations is not None:
-        pop = pop[:max(1, max_evaluations)]
+        cands = cands[:max(1, max_evaluations)]
+    pop = Population.from_candidates(cands)
     reports = _evaluate(evaluator, pop)
     evals_used = len(pop)
-    seed_best_time = min(r.time_per_step for r in reports)
+    times = np.asarray([r.time_per_step for r in reports])
+    energies = np.asarray([r.energy_per_step for r in reports])
+    seed_best_time = float(times.min())
     # every phenotype ever priced, across generations
-    tried = {_phenotype(c) for c in pop}
+    tried = {pop.phenotype(k) for k in range(len(pop))}
+    archive = EpsParetoArchive(pareto_eps)
 
-    order = sorted(range(len(pop)), key=lambda k: _fitness(reports[k]))
-    pop = [pop[k] for k in order]
+    def _order(t, e):
+        """(rank, time, energy) survival order — np.lexsort is keyed last
+        first."""
+        return np.lexsort((e, t, pareto_ranks(t, e)))
+
+    order = _order(times, energies)
+    pop = pop.take(order)
     reports = [reports[k] for k in order]
+    times, energies = times[order], energies[order]
+    archive.update(pop, times, energies, reports)
 
     history = [GenStats(generation=0,
-                        best_time=reports[0].time_per_step,
-                        best_energy=reports[0].energy_per_step,
-                        mean_time=float(np.mean([r.time_per_step
-                                                 for r in reports])),
-                        n_evals=evals_used)]
+                        best_time=float(times[0]),
+                        best_energy=float(energies[0]),
+                        mean_time=float(times.mean()),
+                        n_evals=evals_used,
+                        front_size=len(archive))]
 
+    n_layers = len(net.layers)
+    n_slots = profile.n_cores
     for gen in range(1, generations + 1):
         n_off = population_size
         if max_evaluations is not None:
             n_off = min(n_off, max_evaluations - evals_used)
         if n_off <= 0:
             break
-        offspring: list[Candidate] = []
-        for _ in range(n_off):
-            i = _tournament(reports, tournament_k, rng)
-            child = mutate(pop[i], reports[i], net, profile, rng,
-                           explore_prob=explore_prob)
+        # vectorized tournament: the population is (rank, time, energy)-
+        # sorted, so fitness order == index order and a tournament is a
+        # row-min over the stacked draw matrix
+        draws = rng.integers(0, len(pop),
+                             size=(n_off, max(1, tournament_k)))
+        parents = draws.min(axis=1)
+        off_cores = np.empty((n_off, n_layers), np.int32)
+        off_perm = np.empty((n_off, n_slots), np.int32)
+        for j, i in enumerate(parents):
+            i = int(i)
+            c, p = _mutate_rows(pop.cores[i], pop.perm[i], reports[i], rng,
+                                tables, explore_prob=explore_prob)
             for _ in range(4):          # don't waste budget on repeats
-                if _phenotype(child) not in tried:
+                if Population.row_key(c, p) not in tried:
                     break
-                child = mutate(pop[i], reports[i], net, profile, rng,
-                               explore_prob=explore_prob)
-            tried.add(_phenotype(child))
-            offspring.append(child)
-        off_reports = _evaluate(evaluator, offspring)
-        evals_used += len(offspring)
+                c, p = _mutate_rows(pop.cores[i], pop.perm[i], reports[i],
+                                    rng, tables, explore_prob=explore_prob)
+            tried.add(Population.row_key(c, p))
+            off_cores[j], off_perm[j] = c, p
+        off_pop = Population(off_cores, off_perm)
+        off_reports = _evaluate(evaluator, off_pop)
+        evals_used += len(off_pop)
+        off_times = np.asarray([r.time_per_step for r in off_reports])
+        off_energies = np.asarray([r.energy_per_step for r in off_reports])
+        archive.update(off_pop, off_times, off_energies, off_reports)
 
         # (mu + lambda) elitist survival over unique candidates
-        all_c = pop + offspring
+        all_pop = Population.concatenate(pop, off_pop)
         all_r = reports + off_reports
-        order = sorted(range(len(all_c)), key=lambda k: _fitness(all_r[k]))
-        pop, reports, seen = [], [], set()
+        all_t = np.concatenate([times, off_times])
+        all_e = np.concatenate([energies, off_energies])
+        order = _order(all_t, all_e)
+        keep, seen = [], set()
         for k in order:
-            if _phenotype(all_c[k]) in seen:
+            key = all_pop.phenotype(int(k))
+            if key in seen:
                 continue
-            seen.add(_phenotype(all_c[k]))
-            pop.append(all_c[k])
-            reports.append(all_r[k])
-            if len(pop) == population_size:
+            seen.add(key)
+            keep.append(int(k))
+            if len(keep) == population_size:
                 break
+        pop = all_pop.take(keep)
+        reports = [all_r[k] for k in keep]
+        times, energies = all_t[keep], all_e[keep]
         history.append(GenStats(
             generation=gen,
-            best_time=reports[0].time_per_step,
-            best_energy=reports[0].energy_per_step,
-            mean_time=float(np.mean([r.time_per_step for r in reports])),
-            n_evals=evals_used))
+            best_time=float(times[0]),
+            best_energy=float(energies[0]),
+            mean_time=float(times.mean()),
+            n_evals=evals_used,
+            front_size=len(archive)))
 
-    best, best_r = pop[0], reports[0]
+    best, best_r = pop.candidate(0), reports[0]
+    front, front_reports = archive.front()
     return SearchResult(candidate=best, partition=best.partition(),
                         mapping=best.mapping(), report=best_r,
                         history=history, n_evals=evals_used,
-                        seed_best_time=seed_best_time)
+                        seed_best_time=seed_best_time,
+                        front=front, front_reports=front_reports)
 
 
 def greedy_then_evolve(net: SimNetwork, profile: ChipProfile,

@@ -15,19 +15,25 @@ from repro.neuromorphic.network import (BatchCounters, SimLayer, SimNetwork,
                                         fc_network, make_inputs,
                                         programmed_fc_network)
 from repro.neuromorphic.partition import Partition, minimal_partition
-from repro.neuromorphic.noc import (Mapping, ordered_mapping, random_mapping,
-                                    route_batch, strided_mapping)
-from repro.neuromorphic.timestep import (PricingCache, SimReport,
+from repro.neuromorphic.noc import (Mapping, flow_matrix_population,
+                                    ordered_mapping, random_mapping,
+                                    route_batch,
+                                    router_incidence_population,
+                                    strided_mapping)
+from repro.neuromorphic.timestep import (PopulationBatch, PricingCache,
+                                         SimReport, build_population_batch,
                                          precompute_pricing, price_candidate,
-                                         simulate, simulate_population)
+                                         price_population_vmap, simulate,
+                                         simulate_population)
 
 __all__ = [
     "ChipProfile", "akd1000_like", "loihi2_like", "speck_like",
     "BatchCounters", "SimLayer", "SimNetwork", "fc_network", "make_inputs",
     "programmed_fc_network",
     "Partition", "minimal_partition",
-    "Mapping", "ordered_mapping", "random_mapping", "route_batch",
-    "strided_mapping",
-    "PricingCache", "SimReport", "precompute_pricing", "price_candidate",
+    "Mapping", "flow_matrix_population", "ordered_mapping", "random_mapping",
+    "route_batch", "router_incidence_population", "strided_mapping",
+    "PopulationBatch", "PricingCache", "SimReport", "build_population_batch",
+    "precompute_pricing", "price_candidate", "price_population_vmap",
     "simulate", "simulate_population",
 ]

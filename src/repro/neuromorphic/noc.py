@@ -17,8 +17,10 @@ congestion is two small matmuls.
 
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
+import threading
 
 import numpy as np
 
@@ -182,6 +184,167 @@ def _flow_matrix(cores: tuple[int, ...], phys: tuple[int, ...],
         for g in src_idx:
             np.add.at(P[g], routers[g] * R + dst_routers, 1.0)
     return P, dup
+
+
+# ---------------------------------------------------------------- population
+
+#: Bytes-keyed LRU of per-candidate ``(P, dup)`` routing structures.  The
+#: evolutionary search carries survivors between generations, so most of a
+#: generation's genomes were already routed; keying by the raw genome bytes
+#: (core counts + expressed physical slots) lets :func:`flow_matrix_population`
+#: skip their scatter entirely.  Guarded by a lock so population pricing can
+#: be driven from worker threads.
+_FLOW_CACHE: collections.OrderedDict = collections.OrderedDict()
+_FLOW_CACHE_MAX = 4096
+_FLOW_CACHE_LOCK = threading.Lock()
+
+
+def flow_cache_clear() -> None:
+    """Drop the population flow-matrix cache (tests / memory pressure)."""
+    with _FLOW_CACHE_LOCK:
+        _FLOW_CACHE.clear()
+
+
+def flow_matrix_population(cores_rows, phys_rows, grid: tuple[int, int],
+                           n_cores_phys: int, n_pad: int, *,
+                           cache: bool = True,
+                           ) -> tuple[np.ndarray, np.ndarray]:
+    """Batched :func:`_flow_matrix`: all candidates' routing structures in
+    one shot.
+
+    Args:
+      cores_rows: per-candidate layer core counts — sequence of K int
+        sequences, each of length ``n_layers``.
+      phys_rows: per-candidate *expressed* physical slot assignments —
+        sequence of K int sequences, row k of length ``sum(cores_rows[k])``.
+      n_pad: logical-core padding width (>= every candidate's total cores).
+
+    Returns ``(P_stack, dup_stack)``: a ``(K, n_pad, R*R)`` float32 tensor
+    whose k-th leading slice equals ``_flow_matrix``'s ``P`` for candidate k
+    (zero rows beyond its ``n_logical``), and the ``(K, n_pad)`` float64
+    duplication factors (zero on padding).  Cache misses are built with a
+    single ``np.add.at`` scatter over the stacked tensor; hits are pasted
+    from the bytes-keyed LRU.  Entries are exact small-integer counts, so
+    float32 storage is lossless.  ``cache=False`` skips storing the raw
+    matrices (:func:`router_incidence_population` only ever re-reads the
+    much smaller folded form, so caching the dense ``P`` for it would
+    waste most of the LRU's memory on dead entries).
+    """
+    rows, cols = grid
+    R = rows * cols
+    cpr = max(1, n_cores_phys // R)
+    cores_rows = [np.asarray(c, np.int32) for c in cores_rows]
+    phys_rows = [np.asarray(p, np.int32) for p in phys_rows]
+    K = len(cores_rows)
+    if K != len(phys_rows):
+        raise ValueError("cores_rows and phys_rows disagree on K")
+
+    P_stack = np.zeros((K, n_pad, R * R), np.float32)
+    dup_stack = np.zeros((K, n_pad), np.float64)
+    keys = []
+    misses = []
+    with _FLOW_CACHE_LOCK:
+        for k, (cores, phys) in enumerate(zip(cores_rows, phys_rows)):
+            key = (grid, n_cores_phys, cores.tobytes(), phys.tobytes())
+            keys.append(key)
+            hit = _FLOW_CACHE.get(key)
+            if hit is not None:
+                _FLOW_CACHE.move_to_end(key)
+                P_k, dup_k = hit
+                P_stack[k, :P_k.shape[0]] = P_k
+                dup_stack[k, :dup_k.shape[0]] = dup_k
+            else:
+                misses.append(k)
+
+    if misses:
+        k_idx, core_idx, flat_idx = [], [], []
+        for k in misses:
+            cores, phys = cores_rows[k], phys_rows[k]
+            routers = phys // cpr
+            off = np.concatenate([[0], np.cumsum(cores)]).astype(int)
+            n_layers = len(cores)
+            for l in range(n_layers):
+                src = np.arange(off[l], off[l + 1])
+                if l + 1 < n_layers:
+                    dst_r = routers[off[l + 1]:off[l + 2]]
+                else:
+                    dst_r = np.zeros(1, np.int32)     # chip I/O port
+                dup_stack[k, off[l]:off[l + 1]] = len(dst_r)
+                k_idx.append(np.full(src.size * dst_r.size, k, np.intp))
+                core_idx.append(np.repeat(src, dst_r.size))
+                flat_idx.append((routers[src][:, None] * R
+                                 + dst_r[None, :]).reshape(-1))
+        np.add.at(P_stack,
+                  (np.concatenate(k_idx), np.concatenate(core_idx),
+                   np.concatenate(flat_idx)), 1.0)
+        if cache:
+            with _FLOW_CACHE_LOCK:
+                for k in misses:
+                    n_logical = int(cores_rows[k].sum())
+                    _FLOW_CACHE[keys[k]] = (P_stack[k, :n_logical].copy(),
+                                            dup_stack[k, :n_logical].copy())
+                    _FLOW_CACHE.move_to_end(keys[k])
+                while len(_FLOW_CACHE) > _FLOW_CACHE_MAX:
+                    _FLOW_CACHE.popitem(last=False)
+    return P_stack, dup_stack
+
+
+def router_incidence_population(cores_rows, phys_rows, grid: tuple[int, int],
+                                n_cores_phys: int, n_pad: int,
+                                ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Path-incidence-folded :func:`flow_matrix_population`.
+
+    Returns ``(PL, ph, dup)``: ``PL`` is ``(K, n_pad, R)`` float64 with
+    ``PL = P @ path_incidence`` (so a candidate's per-router loads are
+    ``msgs @ PL`` — the ``(T, R*R)`` flow tensor never materializes), ``ph``
+    is ``(K, n_pad)`` float64 with ``ph = P @ pair_hops`` (total hops are
+    ``msgs @ ph``), and ``dup`` the duplication factors.  Because every
+    entry of ``P``, the incidence, and the hop vector is a small exact
+    integer, the fold is exact: ``msgs @ (P @ inc) == (msgs @ P) @ inc``
+    bit-for-bit in float64.  Folded rows are LRU-cached by genome bytes
+    alongside the raw flow matrices.
+    """
+    rows, cols = grid
+    R = rows * cols
+    cores_rows = [np.asarray(c, np.int32) for c in cores_rows]
+    phys_rows = [np.asarray(p, np.int32) for p in phys_rows]
+    K = len(cores_rows)
+    PL = np.zeros((K, n_pad, R), np.float64)
+    ph = np.zeros((K, n_pad), np.float64)
+    dup = np.zeros((K, n_pad), np.float64)
+    keys, misses = [], []
+    with _FLOW_CACHE_LOCK:
+        for k, (cores, phys) in enumerate(zip(cores_rows, phys_rows)):
+            key = ("fold", grid, n_cores_phys, cores.tobytes(),
+                   phys.tobytes())
+            keys.append(key)
+            hit = _FLOW_CACHE.get(key)
+            if hit is not None:
+                _FLOW_CACHE.move_to_end(key)
+                PL_k, ph_k, dup_k = hit
+                n = PL_k.shape[0]
+                PL[k, :n], ph[k, :n], dup[k, :n] = PL_k, ph_k, dup_k
+            else:
+                misses.append(k)
+    if misses:
+        P_m, dup_m = flow_matrix_population(
+            [cores_rows[k] for k in misses], [phys_rows[k] for k in misses],
+            grid, n_cores_phys, n_pad, cache=False)
+        inc = _path_incidence(grid).astype(np.float64)
+        hops_vec = _pair_hops(grid).astype(np.float64)
+        PL_m = P_m.astype(np.float64) @ inc           # (M, n_pad, R)
+        ph_m = P_m.astype(np.float64) @ hops_vec      # (M, n_pad)
+        with _FLOW_CACHE_LOCK:
+            for j, k in enumerate(misses):
+                n = int(cores_rows[k].sum())
+                PL[k], ph[k], dup[k] = PL_m[j], ph_m[j], dup_m[j]
+                _FLOW_CACHE[keys[k]] = (PL_m[j, :n].copy(),
+                                        ph_m[j, :n].copy(),
+                                        dup_m[j, :n].copy())
+                _FLOW_CACHE.move_to_end(keys[k])
+            while len(_FLOW_CACHE) > _FLOW_CACHE_MAX:
+                _FLOW_CACHE.popitem(last=False)
+    return PL, ph, dup
 
 
 def route_batch(part: Partition, mapping: Mapping, msgs_out: np.ndarray,

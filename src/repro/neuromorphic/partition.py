@@ -73,13 +73,21 @@ def max_cores_for_layer(net: SimNetwork, layer_idx: int) -> int:
     return layer.n_neurons
 
 
+def layer_fits(layer, n_cores: int, profile: ChipProfile) -> bool:
+    """Per-core capacity predicate: ``n_cores`` cores satisfy the chip's
+    neuron-state and synaptic-memory limits for this layer.  The single
+    source of the capacity formulas — ``minimal_partition``,
+    ``validate_partition``, and the search's feasibility tables
+    (:func:`repro.core.search.move_tables`) all go through here."""
+    return (-(-layer.n_neurons // n_cores) <= profile.neurons_per_core
+            and layer.weights_per_core(n_cores) <= profile.synapses_per_core)
+
+
 def _min_cores(net: SimNetwork, layer_idx: int, profile: ChipProfile) -> int:
     layer = net.layers[layer_idx]
     cap = max_cores_for_layer(net, layer_idx)
     for c in range(1, cap + 1):
-        fits_neurons = -(-layer.n_neurons // c) <= profile.neurons_per_core
-        fits_weights = layer.weights_per_core(c) <= profile.synapses_per_core
-        if fits_neurons and fits_weights:
+        if layer_fits(layer, c, profile):
             return c
     raise ValueError(
         f"layer {layer.name} cannot fit on {profile.name} at any split")
@@ -119,8 +127,6 @@ def validate_partition(net: SimNetwork, part: Partition,
         c = part.cores[i]
         if c < 1 or c > max_cores_for_layer(net, i):
             return False
-        if -(-layer.n_neurons // c) > profile.neurons_per_core:
-            return False
-        if layer.weights_per_core(c) > profile.synapses_per_core:
+        if not layer_fits(layer, c, profile):
             return False
     return True

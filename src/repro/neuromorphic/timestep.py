@@ -55,9 +55,18 @@ import numpy as np
 from repro.core.metrics import LoadStats, WorkloadMetrics
 from repro.neuromorphic.network import BatchCounters, CounterMaps, SimNetwork
 from repro.neuromorphic.noc import (Mapping, NocTraffic, ordered_mapping,
-                                    route_batch, route_step)
-from repro.neuromorphic.partition import Partition, minimal_partition
+                                    route_batch, route_step,
+                                    router_incidence_population)
+from repro.neuromorphic.partition import (Partition, max_cores_for_layer,
+                                          minimal_partition)
 from repro.neuromorphic.platform import ChipProfile
+
+# jax is a hard dependency of the functional engine (repro.neuromorphic.
+# network) already; the vmap population backend additionally needs x64
+# scoping for float64 parity with the NumPy pricing path.
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
 
 #: Engine used when :func:`simulate` is called without an explicit
 #: ``engine=``.  ``"batched"`` is the layer-major, time-batched engine;
@@ -262,11 +271,20 @@ class LayerPricing:
 @dataclasses.dataclass
 class PricingCache:
     """Everything :func:`price_candidate` needs that does not depend on the
-    candidate: the functional outputs plus per-layer :class:`LayerPricing`."""
+    candidate: the functional outputs plus per-layer :class:`LayerPricing`.
+    ``vmap_pricer`` lazily holds the compiled population pricer for the
+    ``backend="vmap"`` path (one per cache — a cache is bound to one
+    (net, xs, profile) workload)."""
 
     outputs: np.ndarray
     T: int
     layers: list[LayerPricing]
+    vmap_pricer: object = dataclasses.field(default=None, repr=False,
+                                            compare=False)
+    #: per-partition padded index rows, keyed by the cores tuple (see
+    #: :func:`build_population_batch`)
+    row_cache: dict = dataclasses.field(default_factory=dict, repr=False,
+                                        compare=False)
 
 
 def _neuron_csum(per_neuron: np.ndarray) -> np.ndarray:
@@ -343,7 +361,8 @@ def _cached_layer_counters(lp: LayerPricing, part: Partition, layer_idx: int,
 
 def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                         candidates, *, precomputed: tuple | None = None,
-                        cache: PricingCache | None = None) -> list[SimReport]:
+                        cache: PricingCache | None = None,
+                        backend: str = "numpy") -> list[SimReport]:
     """Price many (partition, mapping) candidates from ONE functional run.
 
     ``candidates`` is an iterable of ``(Partition, Mapping)`` pairs.  The
@@ -353,16 +372,24 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
     gathered for the whole population at once (:func:`_seg_population`), and
     only the small (T, cores) stage/energy/NoC math runs per candidate.
 
-    Every report is bit-identical to the corresponding single-candidate
-    ``simulate(net, xs, profile, part, mapping)`` call with the batched
-    engine: the same cumsums are indexed and the same float op order runs on
-    the gathered segments (asserted by ``tests/test_search.py``).
+    With ``backend="numpy"`` (default) every report is bit-identical to the
+    corresponding single-candidate ``simulate(net, xs, profile, part,
+    mapping)`` call with the batched engine: the same cumsums are indexed and
+    the same float op order runs on the gathered segments (asserted by
+    ``tests/test_search.py``).  ``backend="vmap"`` runs the whole
+    population's pricing math as one jitted ``jax.vmap`` over the padded
+    population axis (:func:`price_population_vmap`) — results agree with the
+    NumPy path within float64 roundoff (see ``docs/simulator.md``).
     """
     cands = list(candidates)
     if not cands:
         return []
     cache = cache or precompute_pricing(net, xs, profile,
                                         precomputed=precomputed)
+    if backend == "vmap":
+        return price_population_vmap(net, profile, cache, cands)
+    if backend != "numpy":
+        raise ValueError(f"unknown population backend {backend!r}")
     n_layers = len(cache.layers)
     seg_by_cand: list[list[tuple]] = [[None] * n_layers for _ in cands]
     for l, lp in enumerate(cache.layers):
@@ -477,6 +504,318 @@ def price_candidate(net: SimNetwork, profile: ChipProfile,
         max_link_steps=max_link_steps,
         total_msgs=total_msgs, total_neuron_steps=total_neuron_steps,
         stage_votes=stage_votes)
+
+
+# --------------------------------------------------------------- vmap backend
+#
+# The array-native population pricer: every candidate's (T, cores) stage
+# reductions and NoC matmuls run as ONE jitted ``jax.vmap`` over the padded
+# population axis.  Padding/masking contract:
+#
+# * logical cores are padded to a fixed width ``Ncap`` (the workload's
+#   maximum feasible total cores, capped at ``profile.n_cores``) so the
+#   compiled executable is reused across generations and population sizes;
+# * a padded core has ``seg_lo == seg_hi == 0`` (its cumsum gather is an
+#   empty segment -> exact 0 counters), ``mask == 0`` (its broadcast
+#   ``msgs_in`` and fixed core overhead are zeroed before any max/sum), and
+#   all-zero flow-matrix rows (it injects nothing into the NoC);
+# * per-layer cost constants are folded into per-layer coefficient vectors in
+#   float64 Python — the same constant folding as the NumPy path — and
+#   gathered per core through the layer-id vector.
+#
+# Arithmetic runs in float64 (``jax.experimental.enable_x64`` scoped to this
+# path), with the same elementwise formulas and reduction semantics as the
+# NumPy path; XLA may reassociate/fuse (FMA), so results agree to float64
+# roundoff rather than bit-for-bit — the parity suite asserts
+# ``rtol=1e-9`` (``tests/test_population_pricing.py``).
+
+
+@dataclasses.dataclass
+class PopulationBatch:
+    """Padded, stacked pricing inputs for one candidate population (the
+    array-native genome view consumed by the jitted pricer).  ``PL``/``ph``
+    carry the path-incidence-folded routing structures of
+    :func:`repro.neuromorphic.noc.router_incidence_population`, so the NoC
+    term is two tiny (T, cores) matmuls per candidate instead of a dense
+    (T, R*R) flow-tensor build."""
+
+    mask: np.ndarray       # (K, Ncap) float64; 1.0 on live cores
+    lid: np.ndarray        # (K, Ncap) int32 layer id per core (0 on padding)
+    seg_lo: np.ndarray     # (K, Ncap) int32 into the concatenated cumsums
+    seg_hi: np.ndarray     # (K, Ncap) int32
+    neurons: np.ndarray    # (K, Ncap) float64 neurons per core
+    PL: np.ndarray         # (K, Ncap, R) float64 router-load incidence
+    ph: np.ndarray         # (K, Ncap) float64 per-core hop factors
+    dup: np.ndarray        # (K, Ncap) float64 unicast duplication factors
+    n_logical: np.ndarray  # (K,) int
+
+
+def population_pad_width(net: SimNetwork, profile: ChipProfile) -> int:
+    """Fixed logical-core padding width for (net, profile): every feasible
+    candidate fits, and the jitted pricer compiles exactly once."""
+    cap = sum(min(max_cores_for_layer(net, l), profile.n_cores)
+              for l in range(len(net.layers)))
+    return min(cap, profile.n_cores)
+
+
+#: Per-partition index rows (seg_lo/seg_hi/lid/neurons) are mapping- and
+#: population-independent; survivors carried between generations reuse them.
+_ROW_CACHE_MAX = 8192
+
+
+def build_population_batch(cache: PricingCache, net: SimNetwork,
+                           profile: ChipProfile, pairs,
+                           n_pad: int | None = None) -> PopulationBatch:
+    """(Partition, Mapping) pairs -> padded stacked arrays.  Boundaries come
+    from the same :meth:`Partition.boundaries` the scalar path uses, so the
+    gathered segments index identical cumsum entries."""
+    pairs = list(pairs)
+    K = len(pairs)
+    n_pad = n_pad or population_pad_width(net, profile)
+    lo = np.zeros((K, n_pad), np.int32)
+    hi = np.zeros((K, n_pad), np.int32)
+    lid = np.zeros((K, n_pad), np.int32)
+    mask = np.zeros((K, n_pad), np.float64)
+    neurons = np.zeros((K, n_pad), np.float64)
+    n_logical = np.zeros(K, int)
+    # offsets of each layer's (n_neurons + 1)-wide cumsum block in the
+    # concatenated cumsum arrays
+    widths = [lp.n_neurons + 1 for lp in cache.layers]
+    block_off = np.concatenate([[0], np.cumsum(widths)]).astype(np.int32)
+    rows = cache.row_cache
+    for k, (part, _) in enumerate(pairs):
+        if part.total_cores > n_pad:
+            raise ValueError(
+                f"candidate uses {part.total_cores} cores > pad width {n_pad}")
+        hit = rows.get(part.cores)
+        if hit is None:
+            lo_k, hi_k, lid_k, neu_k = [], [], [], []
+            for l, lp in enumerate(cache.layers):
+                b = part.boundaries(l, lp.n_neurons).astype(np.int32)
+                lo_k.append(block_off[l] + b[:-1])
+                hi_k.append(block_off[l] + b[1:])
+                lid_k.append(np.full(len(b) - 1, l, np.int32))
+                neu_k.append(np.diff(b).astype(np.float64))
+            hit = (np.concatenate(lo_k), np.concatenate(hi_k),
+                   np.concatenate(lid_k), np.concatenate(neu_k))
+            if len(rows) >= _ROW_CACHE_MAX:
+                rows.clear()
+            rows[part.cores] = hit
+        n = hit[0].shape[0]
+        lo[k, :n], hi[k, :n], lid[k, :n], neurons[k, :n] = hit
+        mask[k, :n] = 1.0
+        n_logical[k] = n
+    PL, ph, dup = router_incidence_population(
+        [p.cores for p, _ in pairs],
+        [m.phys[:p.total_cores] for p, m in pairs],
+        profile.grid, profile.n_cores, n_pad)
+    return PopulationBatch(mask=mask, lid=lid, seg_lo=lo, seg_hi=hi,
+                           neurons=neurons, PL=PL, ph=ph, dup=dup,
+                           n_logical=n_logical)
+
+
+class _VmapPricer:
+    """Compiled population pricer bound to one :class:`PricingCache`.
+
+    Holds the device-resident workload constants (concatenated counter
+    cumsums, per-layer coefficient vectors, NoC path incidence — reusing the
+    per-grid lru caches of :mod:`repro.neuromorphic.noc`) and the jitted
+    vmapped pricing function.  Shapes are fixed by ``Ncap``; the population
+    axis K is the vmap axis, so a new population size only re-traces, it
+    does not rebuild the constants.
+    """
+
+    def __init__(self, net: SimNetwork, profile: ChipProfile,
+                 cache: PricingCache):
+        self.profile = profile
+        self.synchronous = profile.synchronous
+        self.T = cache.T
+        self.n_layers = len(cache.layers)
+        w_nnz = sum(l.w_nnz for l in net.layers)
+        w_cap = sum(l.n_weights for l in net.layers)
+        self.weight_density = w_nnz / max(w_cap, 1)
+        p = profile
+        # per-layer coefficient vectors, folded with the SAME Python-float
+        # constant arithmetic as core_times()/price_candidate()
+        mem_msg, mem_syn, ncost, sparse_f, e_act_c = [], [], [], [], []
+        for l, lp in enumerate(cache.layers):
+            model = net.layers[l].neuron_model
+            if lp.sparse:
+                mem_msg.append(p.c_msg_recv + p.c_decode_msg)
+                mem_syn.append(p.c_fetch + p.c_decode_word + p.c_mac)
+            else:
+                mem_msg.append(p.c_msg_recv)
+                mem_syn.append(p.c_fetch + p.c_mac)
+            ncost.append(p.neuron_cost(model))
+            sparse_f.append(1.0 if lp.sparse else 0.0)
+            e_act_c.append(p.e_act * (p.neuron_cost(model) / p.c_act))
+        with enable_x64():
+            self.csums = tuple(
+                jnp.asarray(np.concatenate([getattr(lp, f) for lp in
+                                            cache.layers], axis=1))
+                for f in ("csum_macs", "csum_fetches", "csum_acts",
+                          "csum_msgs"))
+            self.msgs_in_all = jnp.asarray(
+                np.stack([lp.msgs_in for lp in cache.layers], axis=1))
+            self.coefs = tuple(jnp.asarray(np.asarray(v, np.float64))
+                               for v in (mem_msg, mem_syn, ncost, sparse_f,
+                                         e_act_c))
+        self._fn = jax.jit(jax.vmap(
+            self._price_one, in_axes=(0, 0, 0, 0, 0, 0, 0, 0)))
+
+    # ---- the per-candidate pricing program (vmapped over axis 0) --------
+    def _price_one(self, mask, lid, seg_lo, seg_hi, neurons, PL, ph, dup):
+        p = self.profile
+        T = self.T
+        csum_macs, csum_fetches, csum_acts, csum_msgs = self.csums
+        mem_msg, mem_syn, ncost, sparse_f, e_act_c = self.coefs
+
+        macs = csum_macs[:, seg_hi] - csum_macs[:, seg_lo]        # (T, Ncap)
+        fetches = csum_fetches[:, seg_hi] - csum_fetches[:, seg_lo]
+        acts = csum_acts[:, seg_hi] - csum_acts[:, seg_lo]
+        msgs = csum_msgs[:, seg_hi] - csum_msgs[:, seg_lo]
+
+        sp_c = sparse_f[lid]                                      # (Ncap,)
+        synops = jnp.where(sp_c > 0, macs, fetches)
+        msgs_in_c = self.msgs_in_all[:, lid] * mask               # (T, Ncap)
+        mem = msgs_in_c * mem_msg[lid] + synops * mem_syn[lid]
+        act = acts * ncost[lid]
+        core_time = (jnp.maximum(mem, act) + p.t_core_fixed) * mask
+
+        e_events = (p.e_fetch * synops.sum(axis=1)
+                    + p.e_mac * macs.sum(axis=1)
+                    + p.e_decode * (synops * sp_c).sum(axis=1)
+                    + (acts * e_act_c[lid]).sum(axis=1))
+
+        loads = msgs @ PL                                         # (T, R)
+        hops = msgs @ ph                                          # (T,)
+        inject = msgs * dup
+        max_link = loads.max(axis=1)
+        traffic_time = (p.c_route * max_link
+                        + p.c_inject * inject.max(axis=1))
+
+        n_logical = mask.sum().astype(jnp.int32)
+        if self.synchronous:
+            t_compute = core_time.max(axis=1)
+            times = jnp.maximum(t_compute, traffic_time) + p.t_barrier
+            tb = traffic_time > t_compute
+            mb = mem.max(axis=1) >= act.max(axis=1)
+            votes = jnp.stack([(~tb & mb).sum(), (~tb & ~mb).sum(),
+                               tb.sum(), jnp.zeros((), jnp.int32)])
+        else:
+            val = jnp.maximum(mem, act)                           # (T, Ncap)
+            per_layer = jax.ops.segment_max(
+                (val * mask).T, lid, num_segments=self.n_layers)  # (L, T)
+            times = (jnp.maximum(per_layer, 0.0).sum(axis=0)
+                     + p.c_msg_hop * hops / jnp.maximum(n_logical, 1))
+            votes = jnp.stack([jnp.full((), T, jnp.int32)] +
+                              [jnp.zeros((), jnp.int32)] * 3)
+
+        n_active = (((synops + msgs) > 0) & (mask > 0)).sum(axis=1)
+        n_active = jnp.where(n_active == 0, n_logical, n_active)
+        energies = (times * (p.p_idle + p.p_core * n_active)
+                    + e_events + p.e_msg_hop * hops)
+
+        mean_synops = synops.sum(axis=0) / T
+        mean_acts = acts.sum(axis=0) / T
+        mean_msgs = msgs.sum(axis=0) / T
+        total_msgs = msgs.sum()
+        return dict(
+            times=times, energies=energies,
+            time_per_step=times.mean(), energy_per_step=energies.mean(),
+            max_synops=synops.max(axis=1).mean(),
+            max_acts=acts.max(axis=1).mean(),
+            max_link_load=max_link.mean(),
+            mean_synops=mean_synops, mean_acts=mean_acts,
+            mean_msgs=mean_msgs,
+            # LoadStats ingredients (pads are exact zeros -> don't count)
+            syn_total=mean_synops.sum(), syn_max=mean_synops.max(),
+            syn_nact=(mean_synops > 0).sum(),
+            act_total=mean_acts.sum(), act_max=mean_acts.max(),
+            act_nact=(mean_acts > 0).sum(),
+            votes=votes,
+            total_msgs=total_msgs,
+            total_neuron_steps=T * neurons.sum(),
+        )
+
+    def price(self, batch: PopulationBatch) -> dict:
+        """Run the jitted pricer; returns host NumPy arrays with a leading
+        population axis."""
+        with enable_x64():
+            out = self._fn(jnp.asarray(batch.mask), jnp.asarray(batch.lid),
+                           jnp.asarray(batch.seg_lo),
+                           jnp.asarray(batch.seg_hi),
+                           jnp.asarray(batch.neurons), jnp.asarray(batch.PL),
+                           jnp.asarray(batch.ph), jnp.asarray(batch.dup))
+        return jax.device_get(out)
+
+
+def price_population_vmap(net: SimNetwork, profile: ChipProfile,
+                          cache: PricingCache, pairs) -> list[SimReport]:
+    """Price a candidate population with the jitted ``jax.vmap`` pipeline.
+
+    Functionally equivalent to the NumPy :func:`simulate_population` path
+    (same cumsums, same boundaries, same cost formulas) within float64
+    roundoff; ~an order of magnitude higher pricing throughput at
+    population >= 64 because the per-candidate Python/NumPy dispatch
+    collapses into one compiled program (``BENCH_search.json``).
+    """
+    pairs = list(pairs)
+    if not pairs:
+        return []
+    if cache.vmap_pricer is None:
+        cache.vmap_pricer = _VmapPricer(net, profile, cache)
+    pricer: _VmapPricer = cache.vmap_pricer
+    batch = build_population_batch(cache, net, profile, pairs)
+    out = pricer.price(batch)
+    T = cache.T
+    outputs = cache.outputs
+    w_density = pricer.weight_density
+    stage_names = ("memory", "compute", "traffic", "barrier")
+    reports = []
+    for k, (part, _) in enumerate(pairs):
+        n = batch.n_logical[k]
+        votes = out["votes"][k]
+
+        def _stats(total, mx, n_act):
+            total, mx, n_act = float(total), float(mx), int(n_act)
+            mean = total / max(n_act, 1)
+            return LoadStats(total=total, max=mx, mean=mean,
+                             imbalance=(mx / mean) if mean > 0 else 1.0,
+                             n_units=int(n), n_active=n_act)
+
+        link_mean = float(out["max_link_load"][k])
+        total_msgs = float(out["total_msgs"][k])
+        metrics = WorkloadMetrics(
+            synops=_stats(out["syn_total"][k], out["syn_max"][k],
+                          out["syn_nact"][k]),
+            acts=_stats(out["act_total"][k], out["act_max"][k],
+                        out["act_nact"][k]),
+            traffic=LoadStats(
+                total=link_mean, max=link_mean,
+                mean=link_mean if link_mean > 0 else 0.0, imbalance=1.0,
+                n_units=1, n_active=int(link_mean > 0)),
+            msgs_total=total_msgs / T,
+            weight_density=w_density,
+            act_density=(total_msgs
+                         / max(float(out["total_neuron_steps"][k]), 1.0)),
+        )
+        reports.append(SimReport(
+            time_per_step=float(out["time_per_step"][k]),
+            energy_per_step=float(out["energy_per_step"][k]),
+            times=out["times"][k], energies=out["energies"][k],
+            metrics=metrics,
+            max_synops=float(out["max_synops"][k]),
+            max_acts=float(out["max_acts"][k]),
+            max_link_load=link_mean,
+            n_cores_active=part.total_cores,
+            outputs=outputs,
+            per_core_synops=out["mean_synops"][k, :n],
+            per_core_acts=out["mean_acts"][k, :n],
+            per_core_msgs_out=out["mean_msgs"][k, :n],
+            bottleneck_stage=stage_names[int(np.argmax(votes))],
+        ))
+    return reports
 
 
 def _simulate_reference(net: SimNetwork, xs: np.ndarray,

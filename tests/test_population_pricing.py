@@ -1,0 +1,327 @@
+"""Array-native population-pricing pipeline tests: batched flow-matrix
+construction (:func:`repro.neuromorphic.noc.flow_matrix_population`), the
+padded population batch contract, and the jitted ``jax.vmap`` pricing
+backend (:func:`repro.neuromorphic.timestep.price_population_vmap`).
+
+Parity contract (``docs/simulator.md``): the NumPy population path is
+bit-identical to per-candidate ``simulate``; the vmap path runs the same
+float64 formulas under XLA (which may reassociate/fuse), so it is asserted
+to ``rtol=1e-9`` instead.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.partitioner import SimEvaluator
+from repro.core.search import (Population, decode, decode_population,
+                               encode, encode_population, move_tables,
+                               seeded_population)
+from repro.neuromorphic import (Partition, SimLayer, SimNetwork, fc_network,
+                                loihi2_like, make_inputs, minimal_partition,
+                                ordered_mapping, programmed_fc_network,
+                                random_mapping, simulate, simulate_population,
+                                speck_like, strided_mapping)
+from repro.neuromorphic.network import _exact_density_mask
+from repro.neuromorphic.noc import (_flow_matrix, _pair_hops, _path_incidence,
+                                    flow_cache_clear, flow_matrix_population,
+                                    router_incidence_population)
+from repro.neuromorphic.timestep import (build_population_batch,
+                                         population_pad_width,
+                                         precompute_pricing)
+
+quick = pytest.mark.quick
+
+RTOL = 1e-9
+
+
+def fc_workload(sizes=(96, 128, 128, 64), wd=0.6, ad=0.3, steps=3):
+    net = programmed_fc_network(
+        list(sizes), weight_densities=[wd] * (len(sizes) - 1),
+        act_densities=[ad] * (len(sizes) - 1), seed=0,
+        weight_format="sparse")
+    return net, make_inputs(sizes[0], ad, steps, seed=1)
+
+
+def conv_workload(steps=3):
+    rng = np.random.default_rng(2)
+    layers = []
+    h = w = 8
+    c_prev = 2
+    for i, c in enumerate((4, 8)):
+        wgt = rng.normal(0, 1 / 3.0, (3, 3, c_prev, c)).astype(np.float32)
+        wgt *= _exact_density_mask(wgt.shape, 0.6, rng)
+        layers.append(SimLayer(name=f"conv{i}", kind="conv", weights=wgt,
+                               stride=2, in_hw=(h, w)))
+        h, w, c_prev = h // 2, w // 2, c
+    wfc = rng.normal(0, 0.3, (h * w * c_prev, 10)).astype(np.float32)
+    layers.append(SimLayer(name="fc", kind="fc", weights=wfc))
+    net = SimNetwork(layers=layers, in_size=8 * 8 * 2)
+    return net, make_inputs(net.in_size, 0.4, steps, seed=3)
+
+
+def random_genomes(rng, n_cores_phys, n=8):
+    """Random (cores, phys) genome rows of varying layer counts/sizes."""
+    rows = []
+    for _ in range(n):
+        n_layers = int(rng.integers(2, 6))
+        cores = rng.integers(1, 5, size=n_layers)
+        phys = rng.permutation(n_cores_phys)[:int(cores.sum())]
+        rows.append((tuple(int(c) for c in cores),
+                     tuple(int(p) for p in phys)))
+    return rows
+
+
+class TestFlowMatrixPopulation:
+    @quick
+    def test_matches_per_candidate_flow_matrix(self):
+        prof = loihi2_like()
+        rng = np.random.default_rng(0)
+        rows = random_genomes(rng, prof.n_cores, n=10)
+        n_pad = max(sum(c) for c, _ in rows) + 2
+        flow_cache_clear()
+        P, dup = flow_matrix_population([c for c, _ in rows],
+                                        [p for _, p in rows],
+                                        prof.grid, prof.n_cores, n_pad)
+        for k, (cores, phys) in enumerate(rows):
+            P1, d1 = _flow_matrix(cores, phys, prof.grid, prof.n_cores)
+            n = P1.shape[0]
+            assert np.array_equal(P[k, :n], P1)
+            assert np.array_equal(dup[k, :n], d1)
+            # padding contract: no flow, no duplication beyond n_logical
+            assert not P[k, n:].any()
+            assert not dup[k, n:].any()
+
+    @quick
+    def test_cache_hits_reproduce_scatter(self):
+        prof = loihi2_like()
+        rng = np.random.default_rng(1)
+        rows = random_genomes(rng, prof.n_cores, n=6)
+        n_pad = max(sum(c) for c, _ in rows) + 1
+        flow_cache_clear()
+        first = flow_matrix_population([c for c, _ in rows],
+                                       [p for _, p in rows],
+                                       prof.grid, prof.n_cores, n_pad)
+        again = flow_matrix_population([c for c, _ in rows],
+                                       [p for _, p in rows],
+                                       prof.grid, prof.n_cores, n_pad)
+        assert np.array_equal(first[0], again[0])
+        assert np.array_equal(first[1], again[1])
+
+    @quick
+    def test_router_incidence_fold_is_exact(self):
+        """msgs @ (P @ inc) == (msgs @ P) @ inc: integer counts make the
+        reassociation lossless, so the folded structures must equal the
+        explicit product bit-for-bit."""
+        prof = loihi2_like()
+        rng = np.random.default_rng(2)
+        rows = random_genomes(rng, prof.n_cores, n=6)
+        n_pad = max(sum(c) for c, _ in rows)
+        flow_cache_clear()
+        P, dup = flow_matrix_population([c for c, _ in rows],
+                                        [p for _, p in rows],
+                                        prof.grid, prof.n_cores, n_pad)
+        PL, ph, dup2 = router_incidence_population(
+            [c for c, _ in rows], [p for _, p in rows],
+            prof.grid, prof.n_cores, n_pad)
+        inc = _path_incidence(prof.grid).astype(np.float64)
+        hops = _pair_hops(prof.grid).astype(np.float64)
+        assert np.array_equal(PL, P.astype(np.float64) @ inc)
+        assert np.array_equal(ph, P.astype(np.float64) @ hops)
+        assert np.array_equal(dup, dup2)
+
+
+class TestPopulationBatch:
+    @quick
+    def test_padding_and_masking_contract(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        cache = precompute_pricing(net, xs, prof)
+        p0 = minimal_partition(net, prof)
+        pairs = [(p0, ordered_mapping(p0, prof)),
+                 (p0.split(0).split(1), strided_mapping(p0.split(0).split(1),
+                                                        prof))]
+        batch = build_population_batch(cache, net, prof, pairs)
+        n_pad = population_pad_width(net, prof)
+        assert batch.mask.shape == (2, n_pad)
+        for k, (part, _) in enumerate(pairs):
+            n = part.total_cores
+            assert batch.n_logical[k] == n
+            assert batch.mask[k, :n].all() and not batch.mask[k, n:].any()
+            # padded cores gather empty segments: lo == hi == 0
+            assert not batch.seg_lo[k, n:].any()
+            assert not batch.seg_hi[k, n:].any()
+            assert not batch.neurons[k, n:].any()
+            assert not batch.PL[k, n:].any()
+            # live cores cover each layer's neuron range exactly
+            assert batch.neurons[k, :n].sum() == \
+                sum(l.n_neurons for l in net.layers)
+
+
+def _assert_reports_close(a, b):
+    for f in ("times", "energies", "per_core_synops", "per_core_acts",
+              "per_core_msgs_out"):
+        va, vb = getattr(a, f), getattr(b, f)
+        assert va.shape == vb.shape, f
+        assert np.allclose(va, vb, rtol=RTOL, atol=RTOL), f
+    for f in ("time_per_step", "energy_per_step", "max_synops", "max_acts",
+              "max_link_load"):
+        assert np.isclose(getattr(a, f), getattr(b, f), rtol=RTOL), f
+    assert a.bottleneck_stage == b.bottleneck_stage
+    assert a.n_cores_active == b.n_cores_active
+    ma, mb = a.metrics, b.metrics
+    assert np.isclose(ma.msgs_total, mb.msgs_total, rtol=RTOL)
+    assert np.isclose(ma.weight_density, mb.weight_density, rtol=RTOL)
+    assert np.isclose(ma.act_density, mb.act_density, rtol=RTOL)
+    for s in ("synops", "acts", "traffic"):
+        sa, sb = getattr(ma, s), getattr(mb, s)
+        assert (sa.n_units, sa.n_active) == (sb.n_units, sb.n_active), s
+        assert np.isclose(sa.total, sb.total, rtol=RTOL), s
+        assert np.isclose(sa.max, sb.max, rtol=RTOL), s
+        assert np.isclose(sa.imbalance, sb.imbalance, rtol=RTOL), s
+
+
+class TestVmapBackend:
+    @quick
+    def test_fc_parity_with_simulate(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        rng = np.random.default_rng(4)
+        p0 = minimal_partition(net, prof)
+        pairs = [(p0, ordered_mapping(p0, prof)),
+                 (p0.split(0), strided_mapping(p0.split(0), prof)),
+                 (p0.split(1).split(1),
+                  random_mapping(p0.split(1).split(1), prof, rng))]
+        reports = simulate_population(net, xs, prof, pairs, backend="vmap")
+        for (p, m), rp in zip(pairs, reports):
+            _assert_reports_close(
+                rp, simulate(net, xs, prof, p, m, engine="batched"))
+
+    def test_conv_parity_with_numpy_backend(self):
+        net, xs = conv_workload()
+        prof = loihi2_like()
+        parts = [Partition((1, 1, 1)), Partition((2, 4, 2)),
+                 Partition((4, 8, 1))]
+        pairs = [(p, strided_mapping(p, prof)) for p in parts]
+        r_np = simulate_population(net, xs, prof, pairs)
+        r_vm = simulate_population(net, xs, prof, pairs, backend="vmap")
+        for a, b in zip(r_np, r_vm):
+            _assert_reports_close(a, b)
+
+    @quick
+    def test_empty_core_segments(self):
+        net = fc_network([16, 6, 8], weight_density=1.0, seed=19)
+        xs = make_inputs(16, 0.8, 3, seed=20)
+        prof = loihi2_like()
+        pairs = [(Partition((1, 1)), ordered_mapping(Partition((1, 1)),
+                                                     prof)),
+                 (Partition((7, 2)), strided_mapping(Partition((7, 2)),
+                                                     prof))]
+        for (p, m), rp in zip(pairs, simulate_population(net, xs, prof,
+                                                         pairs,
+                                                         backend="vmap")):
+            _assert_reports_close(rp, simulate(net, xs, prof, p, m))
+
+    def test_async_platform_parity(self):
+        """Speck-style chips take the pipeline-latency branch of the jitted
+        program (per-layer segment maxima instead of the barrier max)."""
+        prof = speck_like()
+        rng = np.random.default_rng(7)
+        layers = []
+        h = w = 8
+        c_prev = 2
+        for i, c in enumerate((4, 4)):
+            wgt = rng.normal(0, 1 / 3.0,
+                             (3, 3, c_prev, c)).astype(np.float32)
+            layers.append(SimLayer(name=f"c{i}", kind="conv", weights=wgt,
+                                   stride=2, in_hw=(h, w), neuron_model="if",
+                                   threshold=1.0))
+            h, w, c_prev = h // 2, w // 2, c
+        net = SimNetwork(layers=layers, in_size=8 * 8 * 2)
+        xs = make_inputs(net.in_size, 0.4, 3, seed=8)
+        p = minimal_partition(net, prof)
+        pairs = [(p, ordered_mapping(p, prof))]
+        for (pp, m), rp in zip(pairs, simulate_population(net, xs, prof,
+                                                          pairs,
+                                                          backend="vmap")):
+            _assert_reports_close(rp, simulate(net, xs, prof, pp, m))
+
+    @quick
+    def test_large_population_parity_spot_checks(self):
+        """A seeded 32-candidate population vmap-prices to the same results
+        as the NumPy path (spot-checked pointwise over the whole batch)."""
+        net, xs = fc_workload(steps=2)
+        prof = loihi2_like()
+        rng = np.random.default_rng(9)
+        pairs = [decode(c) for c in seeded_population(net, prof, size=32,
+                                                      rng=rng)]
+        r_np = simulate_population(net, xs, prof, pairs)
+        r_vm = simulate_population(net, xs, prof, pairs, backend="vmap")
+        assert len(r_np) == len(r_vm) == 32
+        for a, b in zip(r_np, r_vm):
+            _assert_reports_close(a, b)
+
+    @quick
+    def test_evaluator_vmap_backend_counts_and_matches(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        ev_np = SimEvaluator(net, xs, prof)
+        ev_vm = SimEvaluator(net, xs, prof, cache=ev_np.cache,
+                             population_backend="vmap")
+        p0 = minimal_partition(net, prof)
+        pairs = [(p0, strided_mapping(p0, prof)),
+                 (p0.split(2), ordered_mapping(p0.split(2), prof))]
+        a = ev_np.evaluate_population(pairs)
+        b = ev_vm.evaluate_population(pairs)
+        assert ev_vm.n_evals == 2
+        for ra, rb in zip(a, b):
+            _assert_reports_close(ra, rb)
+
+    @quick
+    def test_unknown_backend_raises(self):
+        net, xs = fc_workload(steps=2)
+        prof = loihi2_like()
+        p0 = minimal_partition(net, prof)
+        with pytest.raises(ValueError, match="backend"):
+            simulate_population(net, xs, prof,
+                                [(p0, ordered_mapping(p0, prof))],
+                                backend="tpu")
+
+
+class TestTensorFirstRoundTrip:
+    @quick
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**31 - 1))
+    def test_population_round_trip(self, seed):
+        """Hypothesis round-trip: random valid genomes survive
+        encode_population -> decode_population and the Population view
+        unchanged."""
+        prof = loihi2_like()
+        net, _ = fc_workload(steps=2)
+        rng = np.random.default_rng(seed)
+        tables = move_tables(net, prof)
+        cands = []
+        for _ in range(int(rng.integers(1, 7))):
+            cores = np.ones(len(net.layers), np.int32)
+            for _ in range(int(rng.integers(0, 8))):
+                l = int(rng.integers(len(net.layers)))
+                if tables.feasible[l, cores[l] + 1] \
+                        and cores.sum() + 1 <= prof.n_cores:
+                    cores[l] += 1
+            part = Partition(tuple(int(x) for x in cores))
+            cands.append(encode(part, random_mapping(part, prof, rng),
+                                prof.n_cores))
+        cores_mat, perm_mat = encode_population(cands)
+        assert cores_mat.shape == (len(cands), len(net.layers))
+        assert perm_mat.shape == (len(cands), prof.n_cores)
+        assert decode_population(cores_mat, perm_mat) == cands
+        pop = Population(cores_mat, perm_mat)
+        assert pop.candidates() == cands
+        for k, c in enumerate(cands):
+            p, m = decode(c)
+            pp, pm = pop.pairs()[k]
+            assert pp == p
+            assert tuple(pm.phys) == tuple(m.phys)
+            # every row is a permutation of all physical slots
+            assert sorted(pop.perm[k]) == list(range(prof.n_cores))

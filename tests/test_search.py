@@ -6,9 +6,11 @@ import numpy as np
 import pytest
 
 from repro.core.partitioner import SimEvaluator, optimize_partitioning
-from repro.core.search import (Candidate, decode, decode_population, encode,
-                               encode_population, evolutionary_search,
-                               greedy_then_evolve, mutate, seeded_population)
+from repro.core.search import (Candidate, EpsParetoArchive, decode,
+                               decode_population, encode, encode_population,
+                               evolutionary_search, greedy_then_evolve,
+                               knee_point, mutate, pareto_ranks,
+                               seeded_population)
 from repro.neuromorphic import (Partition, SimLayer, SimNetwork, fc_network,
                                 loihi2_like, make_inputs, minimal_partition,
                                 ordered_mapping, programmed_fc_network,
@@ -232,6 +234,61 @@ class TestSearch:
             assert child != cand
             assert validate_partition(net, child.partition(), prof)
             assert sorted(child.perm) == list(range(prof.n_cores))
+
+    @quick
+    def test_pareto_ranks_known_points(self):
+        t = np.array([1.0, 2.0, 3.0, 2.0])
+        e = np.array([3.0, 1.0, 2.0, 2.0])
+        r = pareto_ranks(t, e)
+        # (1,3) and (2,1) are mutually nondominated; (2,2) is dominated
+        # only by rank-0 (2,1); (3,2) is also dominated by rank-1 (2,2)
+        assert list(r) == [0, 0, 2, 1]
+        # the lexicographic (time, energy) minimum is always rank 0
+        assert r[int(np.lexsort((e, t))[0])] == 0
+
+    @quick
+    def test_knee_point_prefers_balanced_corner(self):
+        t = np.array([1.0, 5.0, 2.0])
+        e = np.array([5.0, 1.0, 2.0])
+        assert knee_point(t, e) == 2
+
+    @quick
+    def test_eps_archive_bounds_and_dominance(self):
+        arch = EpsParetoArchive(eps=0.05)
+        rng = np.random.default_rng(0)
+        cores = np.ones(2, np.int32)
+        perm = np.arange(4, dtype=np.int32)
+        for _ in range(200):
+            arch.add(float(rng.uniform(1, 10)), float(rng.uniform(1, 10)),
+                     cores, perm, report=None)
+        cands, reports = arch.front()
+        assert 0 < len(cands) <= 200
+        ts = [it["time"] for it in arch._items]
+        es = [it["energy"] for it in arch._items]
+        # archive members never plainly dominate one another
+        for i in range(len(ts)):
+            for j in range(len(ts)):
+                if i != j:
+                    assert not (ts[i] <= ts[j] and es[i] <= es[j]
+                                and (ts[i] < ts[j] or es[i] < es[j]))
+
+    def test_search_returns_front_with_knee(self):
+        net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
+        prof = loihi2_like()
+        ev = SimEvaluator(net, xs, prof)
+        res = evolutionary_search(net, prof, ev, population_size=6,
+                                  generations=4, seed=3)
+        assert res.front and len(res.front) == len(res.front_reports)
+        front_t = [r.time_per_step for r in res.front_reports]
+        front_e = [r.energy_per_step for r in res.front_reports]
+        # sorted by time, mutually nondominated
+        assert front_t == sorted(front_t)
+        assert all(r == 0 for r in pareto_ranks(front_t, front_e))
+        # the best-time result is on (or within eps of) the front
+        assert min(front_t) <= res.report.time_per_step * (1 + 0.01 + 1e-12)
+        knee_c, knee_r = res.knee()
+        assert knee_c in res.front
+        assert res.history[-1].front_size == len(res.front)
 
     def test_history_is_monotone_and_counts_evals(self):
         net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
