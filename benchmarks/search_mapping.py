@@ -10,10 +10,18 @@ is its failure mode), while the evolutionary pipeline spends the same
 run (no greedy seeds) gets the full budget B for reference.
 
 Writes ``BENCH_search.json`` at the repo root: best time/energy per
-optimizer at iso-evaluations, the evolutionary front's knee point, plus a
-population-pricing throughput microbenchmark comparing the NumPy stacked
-path against the jitted ``jax.vmap`` backend at population >= 64 (the
-array-native pipeline's headline number).
+optimizer at iso-evaluations, the evolutionary front's knee point, plus two
+throughput microbenchmarks:
+
+* ``pricing`` — evals/s of the three population-pricing backends
+  (``numpy`` / ``vmap`` / ``device``) repricing one fixed population;
+* ``generation`` — FULL-generation throughput of the three search engines
+  at population >= 256: the host loop pricing through numpy, the host loop
+  pricing through the jitted vmap backend ("vmap-pricing-only" — mutation,
+  selection and survival still per-offspring Python), and the
+  device-resident engine whose whole generation step is one jitted program
+  (``repro.core.search``, ``engine="device"``).  The headline number is
+  ``device_speedup_vs_vmap``.
 """
 
 from __future__ import annotations
@@ -43,10 +51,12 @@ def _pricing_throughput(net, xs, prof, *, pop: int, repeats: int,
     pairs = [decode(c) for c in seeded_population(net, prof, size=pop,
                                                   rng=rng)]
     out = {"pop_size": len(pairs)}
-    # warm both paths (vmap: jit compile; numpy: flow-matrix caches)
-    simulate_population(net, xs, prof, pairs, cache=cache, backend="numpy")
-    simulate_population(net, xs, prof, pairs, cache=cache, backend="vmap")
-    for backend in ("numpy", "vmap"):
+    backends = ("numpy", "vmap", "device")
+    # warm every path (vmap/device: jit compile; numpy: flow-matrix caches)
+    for backend in backends:
+        simulate_population(net, xs, prof, pairs, cache=cache,
+                            backend=backend)
+    for backend in backends:
         t0 = time.perf_counter()
         for _ in range(repeats):
             simulate_population(net, xs, prof, pairs, cache=cache,
@@ -55,6 +65,46 @@ def _pricing_throughput(net, xs, prof, *, pop: int, repeats: int,
         out[f"{backend}_evals_per_sec"] = repeats * len(pairs) / max(dt, 1e-9)
     out["vmap_speedup"] = (out["vmap_evals_per_sec"]
                            / out["numpy_evals_per_sec"])
+    out["device_speedup"] = (out["device_evals_per_sec"]
+                             / out["numpy_evals_per_sec"])
+    return out
+
+
+def _generation_throughput(net, xs, prof, *, pop: int, gens: int,
+                           seed: int = 0) -> dict:
+    """Full-generation throughput of the three search engines on one seeded
+    population: numpy engine + numpy pricing, numpy engine + vmap pricing
+    (the "vmap-pricing-only" arm — the generation loop is still
+    per-offspring host Python), and the device-resident engine.  Each arm
+    runs once to warm jit/flow caches, then is timed over a ``gens``-
+    generation search; throughput counts generations (and offspring
+    pricings) per second."""
+    import numpy as np
+    shared = SimEvaluator(net, xs, prof)
+    rng = np.random.default_rng(seed)
+    seeds = seeded_population(net, prof, size=pop, rng=rng)
+    out = {"pop_size": len(seeds), "generations": gens}
+    arms = (("numpy", "numpy", "numpy"),
+            ("vmap", "numpy", "vmap"),
+            ("device", "device", "vmap"))
+    for name, engine, backend in arms:
+        def run_once(n_gens):
+            ev = SimEvaluator(net, xs, prof, cache=shared.cache,
+                              population_backend=backend)
+            return evolutionary_search(
+                net, prof, ev, population_size=len(seeds), generations=n_gens,
+                seed=seed, seed_candidates=list(seeds), engine=engine)
+        run_once(1)                       # warm jit / flow caches
+        t0 = time.perf_counter()
+        res = run_once(gens)
+        dt = time.perf_counter() - t0
+        out[f"{name}_gens_per_sec"] = gens / max(dt, 1e-9)
+        out[f"{name}_evals_per_sec"] = res.n_evals / max(dt, 1e-9)
+        out[f"{name}_best_time"] = res.report.time_per_step
+    out["device_speedup_vs_vmap"] = (out["device_gens_per_sec"]
+                                     / out["vmap_gens_per_sec"])
+    out["device_speedup_vs_numpy"] = (out["device_gens_per_sec"]
+                                      / out["numpy_gens_per_sec"])
     return out
 
 
@@ -124,6 +174,11 @@ def run(quick: bool = False) -> dict:
     pop = 8 if smoke else (12 if quick else 24)
     gens = 2 if smoke else (5 if quick else 12)
     price_reps = 2 if smoke else (5 if quick else 10)
+    # the generation head-to-head: the device engine's advantage is the
+    # amortized per-offspring host work, so it is measured at a large
+    # population (>= 256 outside the CI smoke path)
+    gen_pop = 64 if smoke else 256
+    gen_gens = 2 if smoke else 3
 
     out = {}
     s5, prof = W.s5_sim(weight_density=0.5, seed=0, weight_format="sparse")
@@ -132,6 +187,9 @@ def run(quick: bool = False) -> dict:
                               generations=gens, seed=0)
     out["s5"]["pricing"] = _pricing_throughput(s5, xs, prof, pop=64,
                                                repeats=price_reps)
+    out["s5"]["generation"] = _generation_throughput(s5, xs, prof,
+                                                     pop=gen_pop,
+                                                     gens=gen_gens)
 
     pnet, pprof = W.pilotnet_sim(weight_density=0.6, seed=1)
     pxs = W.sim_inputs(pnet, 0.3, max(steps - 1, 2), seed=3)
@@ -140,6 +198,9 @@ def run(quick: bool = False) -> dict:
     out["pilotnet"]["pricing"] = _pricing_throughput(pnet, pxs, pprof,
                                                      pop=64,
                                                      repeats=price_reps)
+    out["pilotnet"]["generation"] = _generation_throughput(pnet, pxs, pprof,
+                                                           pop=gen_pop,
+                                                           gens=gen_gens)
 
     with open(BENCH_PATH, "w") as f:
         json.dump(out, f, indent=1)
@@ -169,10 +230,20 @@ def report(res: dict) -> str:
                 f"energy={r['knee_energy']:.1f})")
         pr = r.get("pricing")
         if pr:
+            dev = (f", device {pr['device_evals_per_sec']:8.1f} evals/s"
+                   if "device_evals_per_sec" in pr else "")
             lines.append(
                 f"  {'':8s} population pricing @ pop={pr['pop_size']}: "
                 f"numpy {pr['numpy_evals_per_sec']:8.1f} evals/s, "
-                f"vmap {pr['vmap_evals_per_sec']:8.1f} evals/s "
+                f"vmap {pr['vmap_evals_per_sec']:8.1f} evals/s{dev} "
                 f"-> {pr['vmap_speedup']:.2f}x")
+        ge = r.get("generation")
+        if ge:
+            lines.append(
+                f"  {'':8s} full generations @ pop={ge['pop_size']}: "
+                f"numpy {ge['numpy_gens_per_sec']:6.2f} gen/s, "
+                f"vmap {ge['vmap_gens_per_sec']:6.2f} gen/s, "
+                f"device {ge['device_gens_per_sec']:6.2f} gen/s "
+                f"-> device {ge['device_speedup_vs_vmap']:.2f}x vs vmap")
     lines.append(f"  wrote {BENCH_PATH}")
     return "\n".join(lines)

@@ -15,6 +15,9 @@ from repro.core.metrics import LoadStats, WorkloadMetrics, proxy_gap
 _LAZY = {name: "repro.core.partitioner" for name in (
     "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator",
     "can_split", "optimize_partitioning")}
+_LAZY.update({name: "repro.core.device_search" for name in (
+    "DeviceSearchEngine", "evolutionary_search_device", "generation_draws",
+    "mutate_rows_array", "survival_order_array")})
 _LAZY.update({name: "repro.core.search" for name in (
     "Candidate", "EpsParetoArchive", "MoveTables", "Population",
     "SearchResult", "decode", "decode_population", "encode",
@@ -41,4 +44,6 @@ __all__ = [
     "SearchResult", "decode", "decode_population", "encode",
     "encode_population", "evolutionary_search", "greedy_then_evolve",
     "knee_point", "move_tables", "pareto_ranks", "seeded_population",
+    "DeviceSearchEngine", "evolutionary_search_device", "generation_draws",
+    "mutate_rows_array", "survival_order_array",
 ]

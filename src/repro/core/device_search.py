@@ -1,0 +1,540 @@
+"""Device-resident evolutionary generation engine (``engine="device"``).
+
+The numpy engine in :mod:`repro.core.search` prices generations through the
+stacked population backends, but its generation *loop* — tournament draws,
+the per-offspring split/merge/swap mutation chain, phenotype dedup, elitist
+survival — still runs as per-offspring Python over host NumPy rows, forcing
+a host↔device round-trip every generation.  This module compiles the ENTIRE
+generation step into one jitted program over the stacked ``(K, n_layers)``
+core-count and ``(K, n_slots)`` permutation matrices:
+
+1. **tournament selection** — a row-min over the draw matrix (survivors are
+   kept (rank, time, energy)-sorted, so fitness order == index order);
+2. **table-gated mutation** (:func:`mutate_rows_array`) — the bottleneck
+   stage picks split/merge/swap per offspring, feasibility is a gather into
+   the :class:`~repro.core.search.MoveTables` matrix, and the fallback chain
+   is a deterministic masked cascade (split → merge → swap; a swap of two
+   permutation genes is always valid and always changes the row);
+3. **pricing** — :meth:`DevicePopulationPricer.price_row` vmapped over the
+   offspring axis (segment boundaries and NoC flow structures are derived
+   from the genome rows on device, no host-side batch assembly);
+4. **survival** (:func:`survival_order_array` + :func:`pareto_ranks_array`)
+   — nondomination ranking, ``(rank, time, energy, index)`` lexsort, and a
+   sort-based phenotype dedup, keeping the ``population_size`` best unique
+   rows.
+
+Survivor batches (genomes, objectives, bottleneck stages, hot layers) stay
+device-resident between generations; the only per-generation host traffic
+is the 3-scalar :class:`~repro.core.search.GenStats` record and the
+offspring (times, energies, genomes) fed to the epsilon-Pareto archive.
+
+**The PRNG-key contract.**  All randomness in a run derives from
+``jax.random.PRNGKey(seed)``: generation ``g`` consumes exactly the draws
+of :func:`generation_draws` under ``fold_in(key, g)`` — fixed shapes,
+fixed split order, explicit dtypes.  Because ``jax.random`` is
+deterministic regardless of jit/eager and of backend, a host NumPy mirror
+(``reference=True``) can consume the *identical* draw tensors and replay
+the identical decisions: :func:`evolutionary_search_device` with
+``reference=True`` runs the same algorithm with ``xp=numpy`` host ops and
+the bit-exact numpy pricing backend.  ``tests/test_device_search.py``
+asserts selection/mutation/survival parity exactly and the full fitness
+trajectory to float64 roundoff.
+
+Two deliberate, documented deviations from the numpy engine (same
+*algorithm family*, different micro-policy — the numpy engine remains the
+reference for its own path, not for this one):
+
+* no ``tried``-set resampling of duplicate offspring (a host-side hash
+  set); duplicates are simply removed at survival, and
+* the population size is fixed at the seeded size: when fewer than
+  ``population_size`` unique rows exist the best rows are duplicated
+  rather than shrinking the batch (shapes must be static on device).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from repro.core.search import (Candidate, EpsParetoArchive, GenStats,
+                               MoveTables, Population, SearchResult, decode,
+                               move_tables, pareto_ranks, seeded_population)
+from repro.neuromorphic.timestep import (device_pricer, precompute_pricing,
+                                         price_candidate,
+                                         simulate_population)
+
+#: bottleneck-stage ids, in the (first-max-wins) vote order shared with
+#: ``SimReport.bottleneck_stage`` / ``_VmapPricer`` votes
+STAGE_ID = {"memory": 0, "compute": 1, "traffic": 2, "barrier": 3}
+
+
+# ----------------------------------------------------------- PRNG contract
+
+def generation_draws(key, *, n_off: int, n_pop: int, n_layers: int,
+                     n_slots: int, tournament_k: int) -> dict:
+    """One generation's complete randomness, from one key.
+
+    This function IS the PRNG-key contract: a fixed 8-way split consumed in
+    a fixed order with explicit dtypes, so the jitted device step and the
+    eager NumPy mirror draw identical tensors.  Keys: ``tourn`` (n_off, k)
+    parent indices; ``explore_u`` / ``stage_r`` exploration coin and
+    replacement stage; ``traffic_u`` the merge-vs-swap coin of the traffic
+    move; ``split_pri`` / ``merge_pri`` (n_off, n_layers) random priorities
+    that pick among feasible layers; ``swap_iu`` / ``swap_ju`` the swap
+    gene positions.  Requires an enabled-x64 scope (float64 draws).
+    """
+    ks = jax.random.split(key, 8)
+    kt = max(1, int(tournament_k))
+    return dict(
+        tourn=jax.random.randint(ks[0], (n_off, kt), 0, n_pop,
+                                 dtype=jnp.int32),
+        explore_u=jax.random.uniform(ks[1], (n_off,), dtype=jnp.float64),
+        stage_r=jax.random.randint(ks[2], (n_off,), 0, 3, dtype=jnp.int32),
+        traffic_u=jax.random.uniform(ks[3], (n_off,), dtype=jnp.float64),
+        split_pri=jax.random.uniform(ks[4], (n_off, n_layers),
+                                     dtype=jnp.float64),
+        merge_pri=jax.random.uniform(ks[5], (n_off, n_layers),
+                                     dtype=jnp.float64),
+        swap_iu=jax.random.uniform(ks[6], (n_off,), dtype=jnp.float64),
+        swap_ju=jax.random.uniform(ks[7], (n_off,), dtype=jnp.float64),
+    )
+
+
+# ------------------------------------------------------- array-native moves
+
+def mutate_rows_array(xp, pc, pp, pstage, phot_mem, phot_act, draws,
+                      feasible, n_phys: int, explore_prob: float):
+    """Stacked table-gated mutation: parent rows -> offspring rows.
+
+    Pure array program over the offspring axis, written against the shared
+    numpy/jax.numpy API surface: ``xp=jnp`` is the device path (traced into
+    the jitted generation step), ``xp=numpy`` the host mirror — identical
+    semantics op for op, which the parity suite asserts exactly.
+
+    Per offspring: the parent's bottleneck stage (or, with probability
+    ``explore_prob`` — and always on a "barrier" stage — a uniformly random
+    stage) picks the move family.  memory/compute want a split of the hot
+    layer (falling back to the feasible layer of max random priority);
+    traffic flips a coin between merge and swap.  The fallback cascade is
+    deterministic: an infeasible split falls to merge, an infeasible merge
+    to swap.  A swap exchanges one *expressed* gene with any other gene —
+    permutation entries are distinct, so it always changes the mapping and
+    is always valid.
+    """
+    n_off, n_layers = pc.shape
+    n_slots = pp.shape[1]
+    lrange = xp.arange(n_layers)
+
+    explore = (draws["explore_u"] < explore_prob) | (pstage >= 3)
+    s_eff = xp.where(explore, draws["stage_r"], pstage)
+
+    total = pc.sum(axis=1)
+    split_feas = (feasible[lrange[None, :], pc + 1]
+                  & ((total + 1) <= n_phys)[:, None])
+    merge_feas = (pc > 1) & feasible[lrange[None, :], pc - 1]
+
+    hot = xp.where(s_eff == 0, phot_mem, phot_act)
+    hot_ok = xp.take_along_axis(split_feas, hot[:, None], axis=1)[:, 0]
+    rand_split = xp.argmax(xp.where(split_feas, draws["split_pri"], -1.0),
+                           axis=1).astype(xp.int32)
+    split_l = xp.where(hot_ok, hot, rand_split)
+    any_split = split_feas.any(axis=1)
+    merge_l = xp.argmax(xp.where(merge_feas, draws["merge_pri"], -1.0),
+                        axis=1).astype(xp.int32)
+    any_merge = merge_feas.any(axis=1)
+
+    want_split = s_eff <= 1
+    traffic_merge = (s_eff == 2) & (draws["traffic_u"] < 0.5)
+    do_split = want_split & any_split
+    do_merge = ~do_split & any_merge & (traffic_merge | want_split)
+    do_swap = ~(do_split | do_merge)
+
+    oh_split = (lrange[None, :] == split_l[:, None]) & do_split[:, None]
+    oh_merge = (lrange[None, :] == merge_l[:, None]) & do_merge[:, None]
+    cores = pc + oh_split.astype(pc.dtype) - oh_merge.astype(pc.dtype)
+
+    # swap: i an expressed gene, j any gene (i != j); clamps guard the
+    # u -> index map against u*total rounding up to total
+    i = xp.minimum((draws["swap_iu"] * total).astype(xp.int32), total - 1)
+    j = xp.minimum((draws["swap_ju"] * n_slots).astype(xp.int32),
+                   n_slots - 1)
+    j = xp.where(i == j, (j + 1) % n_slots, j)
+    pi = xp.take_along_axis(pp, i[:, None], axis=1)
+    pj = xp.take_along_axis(pp, j[:, None], axis=1)
+    srange = xp.arange(n_slots)
+    swapped = xp.where(srange[None, :] == i[:, None], pj,
+                       xp.where(srange[None, :] == j[:, None], pi, pp))
+    perm = xp.where(do_swap[:, None], swapped, pp)
+    return cores.astype(xp.int32), perm.astype(xp.int32)
+
+
+def pareto_ranks_array(t, e):
+    """jnp nondomination ranks — the jittable (lax.while_loop) counterpart
+    of :func:`repro.core.search.pareto_ranks`, same peeling algorithm."""
+    dominated_by = ((t[None, :] <= t[:, None]) & (e[None, :] <= e[:, None])
+                    & ((t[None, :] < t[:, None]) | (e[None, :] < e[:, None])))
+    n = t.shape[0]
+
+    def body(state):
+        ranks, remaining, r = state
+        dom = (dominated_by & remaining[None, :]).sum(axis=1)
+        frontier = remaining & (dom == 0)
+        return (jnp.where(frontier, r, ranks), remaining & ~frontier, r + 1)
+
+    ranks, _, _ = jax.lax.while_loop(
+        lambda s: s[1].any(), body,
+        (jnp.zeros(n, jnp.int32), jnp.ones(n, bool), jnp.int32(0)))
+    return ranks
+
+
+def survival_order_array(xp, cores, perm, times, energies, ranks,
+                         n_keep: int):
+    """Elitist survival on stacked rows: indices of the ``n_keep`` best
+    phenotype-unique rows under the total order (rank, time, energy,
+    index).
+
+    Dedup is sort-based (no O(K^2 * genes) equality tensor): rows are
+    lexsorted by their genome columns with survival position as the final
+    tie-break, so equal phenotypes are adjacent and ordered by fitness; a
+    row equal to its sorted predecessor is a duplicate.  Unexpressed
+    permutation genes are masked to -1 first — two genomes differing only
+    in the dead tail are the same phenotype (the array analog of
+    ``Population.row_key``).  If fewer than ``n_keep`` unique rows exist,
+    the best duplicates pad the batch (static shapes).
+    """
+    n = cores.shape[0]
+    idx = xp.arange(n)
+    # total order is unique (index is the last key), so numpy and jax
+    # agree independent of sort-stability implementation details
+    order = xp.lexsort((idx, energies, times, ranks))
+    oc, op = cores[order], perm[order]
+    n_log = oc.sum(axis=1)
+    pm = xp.where(xp.arange(perm.shape[1])[None, :] < n_log[:, None], op, -1)
+    genome = xp.concatenate([oc, pm], axis=1)           # (n, L + S)
+    gsort = xp.lexsort((idx,) + tuple(genome[:, c]
+                                      for c in range(genome.shape[1])))
+    gg = genome[gsort]
+    eq_prev = xp.concatenate(
+        [xp.zeros(1, bool), (gg[1:] == gg[:-1]).all(axis=1)])
+    if xp is np:
+        dup = np.zeros(n, bool)
+        dup[gsort] = eq_prev
+        sel = np.argsort(dup, kind="stable")
+    else:
+        dup = jnp.zeros(n, bool).at[gsort].set(eq_prev)
+        sel = jnp.argsort(dup, stable=True)
+    return order[sel[:n_keep]]
+
+
+# ------------------------------------------------- shared step bookkeeping
+#
+# The generation-step skeleton is written ONCE, parameterized by the array
+# namespace, the pricing function and the ranking function; the jitted
+# device engine and the host mirror differ only in what they inject
+# (jnp + vmapped device pricer + while_loop ranks vs numpy + the bit-exact
+# numpy backend + host ranks).  What the parity suite then actually tests
+# is the real divergence surface: XLA-vs-NumPy numerics of the same array
+# program, and the two pricing paths.
+
+def _sorted_state(xp, rank_fn, cores, perm, out, idx_n):
+    """Price-output dict + genome rows -> survival-sorted state dict."""
+    t, e = out["times"], out["energies"]
+    ranks = rank_fn(t, e)
+    idx = survival_order_array(xp, cores, perm, t, e, ranks, idx_n)
+    return dict(cores=cores[idx], perm=perm[idx], times=t[idx],
+                energies=e[idx], stage=out["stage"][idx],
+                hot_mem=out["hot_mem"][idx], hot_act=out["hot_act"][idx])
+
+
+def _generation_step(xp, price_fn, rank_fn, feasible, n_phys, explore_prob,
+                     state, draws):
+    """One (mu + lambda) generation on stacked rows: select, mutate, price,
+    concatenate with the survivors, rank, survive.  Returns (new state,
+    offspring dict, stats dict)."""
+    parents = draws["tourn"].min(axis=1)
+    oc, op = mutate_rows_array(
+        xp, state["cores"][parents], state["perm"][parents],
+        state["stage"][parents], state["hot_mem"][parents],
+        state["hot_act"][parents], draws, feasible, n_phys, explore_prob)
+    out = price_fn(oc, op)
+    all_c = xp.concatenate([state["cores"], oc])
+    all_p = xp.concatenate([state["perm"], op])
+    all_out = {k: xp.concatenate([state[k], out[k]])
+               for k in ("times", "energies", "stage", "hot_mem", "hot_act")}
+    new = _sorted_state(xp, rank_fn, all_c, all_p, all_out,
+                        state["cores"].shape[0])
+    off = dict(cores=oc, perm=op, times=out["times"],
+               energies=out["energies"])
+    stats = dict(best_time=new["times"][0], best_energy=new["energies"][0],
+                 mean_time=new["times"].mean())
+    return new, off, stats
+
+
+# ----------------------------------------------------------------- engine
+
+class DeviceSearchEngine:
+    """One workload's compiled generation machinery.
+
+    Owns the jitted ``init`` (price + sort the seed population) and
+    ``step`` (the full generation described in the module docstring)
+    programs, both closed over the cache-bound
+    :class:`~repro.neuromorphic.timestep.DevicePopulationPricer` and the
+    feasibility table.  State is a dict of device arrays
+    ``{cores, perm, times, energies, stage, hot_mem, hot_act}`` kept
+    (rank, time, energy)-sorted; nothing in it touches the host between
+    :meth:`step` calls.
+    """
+
+    def __init__(self, net, profile, cache, tables: MoveTables, *,
+                 explore_prob: float, tournament_k: int):
+        self.pricer = device_pricer(net, profile, cache)
+        self.explore_prob = float(explore_prob)
+        self.tournament_k = int(tournament_k)
+        self.n_layers = len(cache.layers)
+        self.n_slots = int(profile.n_cores)
+        self.n_phys = int(tables.n_cores_phys)
+        with enable_x64():
+            self.feasible = jnp.asarray(tables.feasible)
+        self._init_fn = jax.jit(self._init_impl)
+        self._step_fn = jax.jit(self._step_impl, static_argnames=("n_off",))
+
+    def _price(self, cores, perm):
+        """Vmapped device pricing, normalized to the step-skeleton keys
+        (``times``/``energies`` are the per-candidate objectives)."""
+        o = jax.vmap(self.pricer.price_row)(cores, perm)
+        return dict(times=o["time_per_step"], energies=o["energy_per_step"],
+                    stage=o["stage"], hot_mem=o["hot_mem"],
+                    hot_act=o["hot_act"])
+
+    def _init_impl(self, cores, perm):
+        out = self._price(cores, perm)
+        state = _sorted_state(jnp, pareto_ranks_array, cores, perm, out,
+                              cores.shape[0])
+        return state, dict(times=out["times"], energies=out["energies"])
+
+    def _step_impl(self, state, key, n_off: int):
+        draws = generation_draws(key, n_off=n_off,
+                                 n_pop=state["cores"].shape[0],
+                                 n_layers=self.n_layers,
+                                 n_slots=self.n_slots,
+                                 tournament_k=self.tournament_k)
+        return _generation_step(jnp, self._price, pareto_ranks_array,
+                                self.feasible, self.n_phys,
+                                self.explore_prob, state, draws)
+
+    def init(self, cores, perm):
+        with enable_x64():
+            return self._init_fn(jnp.asarray(cores, jnp.int32),
+                                 jnp.asarray(perm, jnp.int32))
+
+    def step(self, state, key, n_off: int):
+        with enable_x64():
+            return self._step_fn(state, key, n_off=n_off)
+
+
+def _engine_for(net, profile, cache, tables, *, explore_prob,
+                tournament_k) -> DeviceSearchEngine:
+    """Engines (and their compiled programs) are cached on the workload's
+    device pricer, keyed by the mutation hyper-parameters, so repeated
+    searches over one cache never re-jit."""
+    pricer = device_pricer(net, profile, cache)
+    engines = pricer.__dict__.setdefault("_search_engines", {})
+    key = (float(explore_prob), int(tournament_k))
+    if key not in engines:
+        engines[key] = DeviceSearchEngine(net, profile, cache, tables,
+                                          explore_prob=explore_prob,
+                                          tournament_k=tournament_k)
+    return engines[key]
+
+
+# -------------------------------------------------------- reference mirror
+
+class _NumpyMirror:
+    """Host replay of the device engine under the shared PRNG-key contract.
+
+    Prices with the bit-exact numpy population backend and runs
+    selection/mutation/survival through the very same array programs with
+    ``xp=numpy``.  This is the semantic specification the jitted engine is
+    tested against — not a production path (use the numpy engine of
+    :func:`repro.core.search.evolutionary_search` for host-only runs).
+    """
+
+    def __init__(self, net, xs, profile, cache, tables, *, explore_prob,
+                 tournament_k):
+        self.net, self.xs, self.profile, self.cache = net, xs, profile, cache
+        self.feasible = np.asarray(tables.feasible)
+        self.n_phys = int(tables.n_cores_phys)
+        self.n_layers = len(cache.layers)
+        self.n_slots = int(profile.n_cores)
+        self.explore_prob = float(explore_prob)
+        self.tournament_k = int(tournament_k)
+
+    def _price(self, cores, perm):
+        pairs = Population(cores, perm).pairs()
+        reports = simulate_population(self.net, self.xs, self.profile,
+                                      pairs, cache=self.cache)
+        t = np.asarray([r.time_per_step for r in reports])
+        e = np.asarray([r.energy_per_step for r in reports])
+        stage = np.asarray([STAGE_ID[r.bottleneck_stage] for r in reports],
+                           np.int32)
+        hot_mem = np.empty(len(reports), np.int32)
+        hot_act = np.empty(len(reports), np.int32)
+        for k, r in enumerate(reports):
+            lids = np.repeat(np.arange(self.n_layers), cores[k])
+            hot_mem[k] = lids[int(np.argmax(r.per_core_synops))]
+            hot_act[k] = lids[int(np.argmax(r.per_core_acts))]
+        return dict(times=t, energies=e, stage=stage, hot_mem=hot_mem,
+                    hot_act=hot_act)
+
+    def init(self, cores, perm):
+        out = self._price(cores, perm)
+        state = _sorted_state(np, pareto_ranks, cores, perm, out,
+                              cores.shape[0])
+        return state, dict(times=out["times"], energies=out["energies"])
+
+    def step(self, state, key, n_off: int):
+        with enable_x64():
+            draws = jax.device_get(generation_draws(
+                key, n_off=n_off, n_pop=state["cores"].shape[0],
+                n_layers=self.n_layers, n_slots=self.n_slots,
+                tournament_k=self.tournament_k))
+        return _generation_step(np, self._price, pareto_ranks,
+                                self.feasible, self.n_phys,
+                                self.explore_prob, state, draws)
+
+
+# ----------------------------------------------------------------- driver
+
+def evolutionary_search_device(
+    net,
+    profile,
+    evaluator,
+    *,
+    population_size: int = 24,
+    generations: int = 16,
+    tournament_k: int = 3,
+    explore_prob: float = 0.25,
+    seed: int = 0,
+    max_evaluations: int | None = None,
+    seed_candidates=None,
+    greedy=None,
+    pareto_eps: float = 0.01,
+    reference: bool = False,
+) -> SearchResult:
+    """Run the device-resident (mu + lambda) search (the ``engine="device"``
+    path of :func:`repro.core.search.evolutionary_search`).
+
+    ``evaluator`` must be :class:`~repro.core.partitioner.SimEvaluator`-like
+    (expose ``net`` / ``xs`` / ``profile`` and ideally a ``cache``): the
+    device engine prices inside its own jitted step, so the evaluator is
+    the source of the pricing cache and the evaluation-count ledger
+    (``n_evals`` is charged per generation to keep iso-budget comparisons
+    with the other engines honest).  The final best-candidate
+    ``SearchResult.report`` and the archive's ``front_reports`` are
+    re-priced once at the end through the bit-exact numpy backend — a
+    stats-only materialization that is *not* charged as search
+    evaluations.  ``reference=True`` swaps the jitted step for the host
+    NumPy mirror (the parity harness; same PRNG-key contract, same
+    trajectory to float64 roundoff).
+    """
+    for attr in ("net", "xs", "profile"):
+        if not hasattr(evaluator, attr):
+            raise TypeError(
+                "engine='device' needs a SimEvaluator-like evaluator "
+                f"(missing .{attr}); plain callables can only drive the "
+                "numpy engine")
+    xs = evaluator.xs
+    cache = getattr(evaluator, "cache", None) \
+        or precompute_pricing(net, xs, profile)
+
+    rng = np.random.default_rng(seed)
+    tables = move_tables(net, profile)
+    cands = list(seed_candidates if seed_candidates is not None else
+                 seeded_population(net, profile, size=population_size,
+                                   rng=rng, greedy=greedy))
+    if not cands:
+        raise ValueError("empty initial population")
+    if max_evaluations is not None:
+        cands = cands[:max(1, max_evaluations)]
+    pop = Population.from_candidates(cands)
+
+    if reference:
+        engine = _NumpyMirror(net, xs, profile, cache, tables,
+                              explore_prob=explore_prob,
+                              tournament_k=tournament_k)
+    else:
+        engine = _engine_for(net, profile, cache, tables,
+                             explore_prob=explore_prob,
+                             tournament_k=tournament_k)
+    base_key = jax.random.PRNGKey(seed)
+
+    state, init_out = engine.init(pop.cores, pop.perm)
+    evals_used = len(pop)
+    _charge(evaluator, len(pop))
+    init_host = jax.device_get(init_out)
+    seed_best_time = float(np.min(init_host["times"]))
+    archive = EpsParetoArchive(pareto_eps)
+    for k in range(len(pop)):
+        archive.add(float(init_host["times"][k]),
+                    float(init_host["energies"][k]),
+                    pop.cores[k], pop.perm[k], None)
+
+    first = jax.device_get({k: state[k] for k in ("times", "energies")})
+    history = [GenStats(generation=0,
+                        best_time=float(first["times"][0]),
+                        best_energy=float(first["energies"][0]),
+                        mean_time=float(np.mean(first["times"])),
+                        n_evals=evals_used,
+                        front_size=len(archive))]
+
+    n_pop = len(pop)
+    for gen in range(1, generations + 1):
+        n_off = n_pop
+        if max_evaluations is not None:
+            n_off = min(n_off, max_evaluations - evals_used)
+        if n_off <= 0:
+            break
+        key = jax.random.fold_in(base_key, gen)
+        state, off, stats = engine.step(state, key, n_off)
+        evals_used += n_off
+        _charge(evaluator, n_off)
+        # the only per-generation host sync: tiny stats + the offspring
+        # batch for the epsilon-Pareto archive
+        host = jax.device_get(dict(off=off, stats=stats))
+        off_h, stats_h = host["off"], host["stats"]
+        for k in range(n_off):
+            archive.add(float(off_h["times"][k]), float(off_h["energies"][k]),
+                        off_h["cores"][k], off_h["perm"][k], None)
+        history.append(GenStats(
+            generation=gen,
+            best_time=float(stats_h["best_time"]),
+            best_energy=float(stats_h["best_energy"]),
+            mean_time=float(stats_h["mean_time"]),
+            n_evals=evals_used,
+            front_size=len(archive)))
+
+    final = jax.device_get({k: state[k] for k in ("cores", "perm")})
+    best = Candidate(tuple(int(x) for x in final["cores"][0]),
+                     tuple(int(x) for x in final["perm"][0]))
+    part, mapping = decode(best)
+    # stats-only materialization through the bit-exact path (uncharged)
+    best_report = price_candidate(net, profile, cache, part, mapping)
+    front, _ = archive.front()
+    front_reports = simulate_population(net, xs, profile,
+                                        [decode(c) for c in front],
+                                        cache=cache) if front else []
+    return SearchResult(candidate=best, partition=part, mapping=mapping,
+                        report=best_report, history=history,
+                        n_evals=evals_used, seed_best_time=seed_best_time,
+                        front=front, front_reports=front_reports)
+
+
+def _charge(evaluator, n: int) -> None:
+    """Record ``n`` candidate pricings on the evaluator's ledger (the
+    iso-budget currency shared with the greedy walk and the numpy engine);
+    evaluators without a counter are left alone."""
+    if hasattr(evaluator, "n_evals"):
+        evaluator.n_evals += int(n)

@@ -65,11 +65,20 @@ class SimEvaluator:
     auditing the cache path at small scale.
 
     ``population_backend`` selects how :meth:`evaluate_population` prices a
-    generation: ``"numpy"`` (stacked gathers + per-candidate NumPy math,
-    bit-identical to ``simulate``) or ``"vmap"`` (one jitted ``jax.vmap``
-    over the padded population axis — float64-roundoff-identical, several
-    times the pricing throughput at population >= 64; see
-    ``BENCH_search.json``).
+    generation — one of the three population backends of
+    :func:`~repro.neuromorphic.timestep.simulate_population`: ``"numpy"``
+    (stacked gathers + per-candidate NumPy math, bit-identical to
+    ``simulate`` — the reference), ``"vmap"`` (one jitted ``jax.vmap`` over
+    the padded population axis, host-built batch structures,
+    float64-roundoff-identical, several times the pricing throughput at
+    population >= 64), or ``"device"`` (the genome rows are the program
+    input and structure construction runs on device too — same parity as
+    vmap; see ``BENCH_search.json`` and ``docs/simulator.md``).
+
+    The evaluator is also the pricing-cache and evaluation-ledger host for
+    the device-resident search (``evolutionary_search(...,
+    engine="device")``), which prices inside its own jitted generation
+    step and charges ``n_evals`` here per generation.
     """
 
     def __init__(self, net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
@@ -95,8 +104,8 @@ class SimEvaluator:
 
     def evaluate_population(self, candidates) -> list[SimReport]:
         """Price a list of (partition, mapping) pairs; one stacked gather
-        per layer (or one jitted vmap program, ``population_backend=
-        "vmap"``) when the pricing cache is live."""
+        per layer (or one jitted program — ``population_backend="vmap"`` /
+        ``"device"``) when the pricing cache is live."""
         cands = list(candidates)
         self.n_evals += len(cands)
         if self.cache is not None:

@@ -45,6 +45,15 @@ rank ordering preserves PR 2's guarantees: elitism plus floorline-informed
 seeding (the greedy optimizer's accepted moves are injected into the initial
 population) still guarantee the search never returns a candidate worse than
 its best seed — and never worse than the greedy result when seeded from it.
+
+Two generation engines drive the loop (``engine=`` on
+:func:`evolutionary_search`): the host ``"numpy"`` engine below — the
+reference semantics, mutating one offspring row at a time — and the
+``"device"`` engine of :mod:`repro.core.device_search`, which compiles the
+whole generation step (selection, the split/merge/swap chain, pricing,
+ranking, survival) into one jitted program over the stacked
+:class:`Population` arrays and keeps survivors accelerator-resident
+between generations.
 """
 
 from __future__ import annotations
@@ -517,6 +526,7 @@ def evolutionary_search(
     seed_candidates: list[Candidate] | None = None,
     greedy: OptimizationResult | None = None,
     pareto_eps: float = 0.01,
+    engine: str = "numpy",
 ) -> SearchResult:
     """Run the (mu + lambda) evolutionary mapping search, tensor-first.
 
@@ -530,7 +540,30 @@ def evolutionary_search(
     sets the epsilon-dominance grid of the (time, energy) archive returned
     as ``SearchResult.front``.  Deterministic for a fixed ``seed`` and
     evaluator.
+
+    ``engine`` selects the generation loop itself: ``"numpy"`` (default,
+    this function's host loop below — per-offspring mutation over NumPy
+    rows, pricing through whichever backend the evaluator is configured
+    with) or ``"device"`` — the fully accelerator-resident loop of
+    :mod:`repro.core.device_search`, in which an entire generation
+    (selection, mutation, pricing, ranking, survival) is one jitted
+    program and survivor batches never leave the device.  The device
+    engine needs a :class:`~repro.core.partitioner.SimEvaluator`-like
+    evaluator and follows its own PRNG-key contract (``docs/search.md``);
+    the two engines are deterministic per seed but not sample-for-sample
+    identical to each other.
     """
+    if engine == "device":
+        from repro.core.device_search import evolutionary_search_device
+        return evolutionary_search_device(
+            net, profile, evaluator, population_size=population_size,
+            generations=generations, tournament_k=tournament_k,
+            explore_prob=explore_prob, seed=seed,
+            max_evaluations=max_evaluations,
+            seed_candidates=seed_candidates, greedy=greedy,
+            pareto_eps=pareto_eps)
+    if engine != "numpy":
+        raise ValueError(f"unknown search engine {engine!r}")
     rng = np.random.default_rng(seed)
     tables = move_tables(net, profile)
     cands = list(seed_candidates if seed_candidates is not None else

@@ -16,13 +16,17 @@ from repro.neuromorphic.network import (BatchCounters, SimLayer, SimNetwork,
                                         programmed_fc_network)
 from repro.neuromorphic.partition import Partition, minimal_partition
 from repro.neuromorphic.noc import (Mapping, flow_matrix_population,
+                                    flow_structures_rows, incidence_tables,
                                     ordered_mapping, random_mapping,
                                     route_batch,
                                     router_incidence_population,
                                     strided_mapping)
-from repro.neuromorphic.timestep import (PopulationBatch, PricingCache,
+from repro.neuromorphic.timestep import (DevicePopulationPricer,
+                                         PopulationBatch, PricingCache,
                                          SimReport, build_population_batch,
-                                         precompute_pricing, price_candidate,
+                                         device_pricer, precompute_pricing,
+                                         price_candidate,
+                                         price_population_device,
                                          price_population_vmap, simulate,
                                          simulate_population)
 
@@ -31,9 +35,11 @@ __all__ = [
     "BatchCounters", "SimLayer", "SimNetwork", "fc_network", "make_inputs",
     "programmed_fc_network",
     "Partition", "minimal_partition",
-    "Mapping", "flow_matrix_population", "ordered_mapping", "random_mapping",
+    "Mapping", "flow_matrix_population", "flow_structures_rows",
+    "incidence_tables", "ordered_mapping", "random_mapping",
     "route_batch", "router_incidence_population", "strided_mapping",
-    "PopulationBatch", "PricingCache", "SimReport", "build_population_batch",
-    "precompute_pricing", "price_candidate", "price_population_vmap",
+    "DevicePopulationPricer", "PopulationBatch", "PricingCache", "SimReport",
+    "build_population_batch", "device_pricer", "precompute_pricing",
+    "price_candidate", "price_population_device", "price_population_vmap",
     "simulate", "simulate_population",
 ]

@@ -24,6 +24,10 @@ import threading
 
 import numpy as np
 
+# jnp is only touched by the device-resident flow-structure path
+# (:func:`flow_structures_rows`); the host paths below stay pure NumPy.
+import jax.numpy as jnp
+
 from repro.neuromorphic.partition import Partition
 from repro.neuromorphic.platform import ChipProfile
 
@@ -344,6 +348,61 @@ def router_incidence_population(cores_rows, phys_rows, grid: tuple[int, int],
                 _FLOW_CACHE.move_to_end(keys[k])
             while len(_FLOW_CACHE) > _FLOW_CACHE_MAX:
                 _FLOW_CACHE.popitem(last=False)
+    return PL, ph, dup
+
+
+@functools.lru_cache(maxsize=16)
+def incidence_tables(grid: tuple[int, int]) -> tuple[np.ndarray, np.ndarray]:
+    """Per-grid routing geometry in the shapes the device path consumes:
+    ``inc3[src, dst, node]`` is the (R, R, R) path-incidence tensor and
+    ``hops2[src, dst]`` the (R, R) Manhattan hop matrix — float64 reshaped
+    views of the lru-cached flat tables shared with :func:`route_batch`."""
+    rows, cols = grid
+    R = rows * cols
+    inc3 = _path_incidence(grid).astype(np.float64).reshape(R, R, R)
+    hops2 = _pair_hops(grid).astype(np.float64).reshape(R, R)
+    return inc3, hops2
+
+
+def flow_structures_rows(lid, router, alive, n_layers: int, inc3, hops2):
+    """ONE candidate's routing structures, built entirely on device.
+
+    The array-native analog of :func:`router_incidence_population` for a
+    genome that never leaves the accelerator: given the candidate's padded
+    per-core layer ids ``lid`` (Ncap,), router ids ``router`` (Ncap,), and
+    float live-core mask ``alive`` (Ncap,), returns the same
+    ``(PL, ph, dup)`` triple — per-core router-load incidence ``msgs @ PL``,
+    hop factors ``msgs @ ph``, unicast duplication — as ``(Ncap, R)`` /
+    ``(Ncap,)`` / ``(Ncap,)`` jnp arrays.  Pure jnp and shape-static, so it
+    traces into the jitted population pricer and the device generation step
+    (no host round-trip, no byte-keyed cache).
+
+    Every intermediate is an exact small-integer count in float64 (layer
+    destination-router counts folded through the integer incidence/hop
+    tables), so the results are bit-identical to the host-built structures
+    of :func:`router_incidence_population` — asserted by
+    ``tests/test_device_search.py``.
+
+    ``n_layers`` is static; ``inc3``/``hops2`` come from
+    :func:`incidence_tables` (callers pass them so they become jit
+    constants).  Dead slots must carry in-range ``lid``/``router`` values
+    (the scatter adds their ``alive == 0`` contribution harmlessly); their
+    output rows are zeroed.
+    """
+    R = inc3.shape[0]
+    # cnt[l, r]: live cores of layer l sitting on router r
+    cnt = jnp.zeros((n_layers, R), jnp.float64).at[lid, router].add(alive)
+    io_row = jnp.zeros((1, R), jnp.float64).at[0, 0].set(1.0)
+    # dest[l]: destination-router core counts for a source core of layer l
+    # (next layer's placement; the last layer exits at the router-0 I/O port)
+    dest = jnp.concatenate([cnt[1:], io_row], axis=0)            # (L, R)
+    # fold per-layer dest counts through the geometry once: L x R x R work
+    # instead of a per-core (Ncap, R, R) gather
+    M = jnp.einsum("ld,sdr->lsr", dest, inc3)                    # (L, R, R)
+    phL = dest @ hops2.T                                         # (L, R)
+    PL = M[lid, router] * alive[:, None]                         # (Ncap, R)
+    ph = phL[lid, router] * alive                                # (Ncap,)
+    dup = dest.sum(axis=1)[lid] * alive                          # (Ncap,)
     return PL, ph, dup
 
 

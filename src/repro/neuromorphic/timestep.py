@@ -44,6 +44,15 @@ work across many candidates:
   of the stacked boundary array).  Results are bit-identical to per-candidate
   :func:`simulate` calls — the same cumsums are indexed and the same float op
   order runs downstream — which :mod:`tests.test_search` asserts.
+
+Population pricing itself comes in three backends (``backend=`` on
+:func:`simulate_population`): ``"numpy"`` — the bit-exact reference above;
+``"vmap"`` — one jitted ``jax.vmap`` over the padded population axis with
+host-assembled batch structures (:func:`price_population_vmap`); and
+``"device"`` — the genome arrays are the program input and batch-structure
+construction itself runs on device (:class:`DevicePopulationPricer`,
+:func:`price_population_device`), which is what lets the evolutionary
+search's ``engine="device"`` generation loop stay accelerator-resident.
 """
 
 from __future__ import annotations
@@ -54,7 +63,8 @@ import numpy as np
 
 from repro.core.metrics import LoadStats, WorkloadMetrics
 from repro.neuromorphic.network import BatchCounters, CounterMaps, SimNetwork
-from repro.neuromorphic.noc import (Mapping, NocTraffic, ordered_mapping,
+from repro.neuromorphic.noc import (Mapping, NocTraffic, flow_structures_rows,
+                                    incidence_tables, ordered_mapping,
                                     route_batch, route_step,
                                     router_incidence_population)
 from repro.neuromorphic.partition import (Partition, max_cores_for_layer,
@@ -281,6 +291,10 @@ class PricingCache:
     layers: list[LayerPricing]
     vmap_pricer: object = dataclasses.field(default=None, repr=False,
                                             compare=False)
+    #: lazily-built :class:`DevicePopulationPricer` for the ``device``
+    #: backend / the device-resident search engine (one per cache)
+    device_pricer_obj: object = dataclasses.field(default=None, repr=False,
+                                                  compare=False)
     #: per-partition padded index rows, keyed by the cores tuple (see
     #: :func:`build_population_batch`)
     row_cache: dict = dataclasses.field(default_factory=dict, repr=False,
@@ -372,14 +386,28 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
     gathered for the whole population at once (:func:`_seg_population`), and
     only the small (T, cores) stage/energy/NoC math runs per candidate.
 
-    With ``backend="numpy"`` (default) every report is bit-identical to the
-    corresponding single-candidate ``simulate(net, xs, profile, part,
-    mapping)`` call with the batched engine: the same cumsums are indexed and
-    the same float op order runs on the gathered segments (asserted by
-    ``tests/test_search.py``).  ``backend="vmap"`` runs the whole
-    population's pricing math as one jitted ``jax.vmap`` over the padded
-    population axis (:func:`price_population_vmap`) — results agree with the
-    NumPy path within float64 roundoff (see ``docs/simulator.md``).
+    Three backends price the population (``docs/simulator.md`` has the
+    full decision guide):
+
+    * ``backend="numpy"`` (default) — stacked cumsum gathers plus
+      per-candidate NumPy stage math.  Every report is bit-identical to the
+      corresponding single-candidate ``simulate(net, xs, profile, part,
+      mapping)`` call with the batched engine: the same cumsums are indexed
+      and the same float op order runs on the gathered segments (asserted
+      by ``tests/test_search.py``).  The reference the other two are
+      checked against.
+    * ``backend="vmap"`` — one jitted ``jax.vmap`` over the padded
+      population axis (:func:`price_population_vmap`); the padded batch
+      structures are still assembled on host.  Agrees with the NumPy path
+      within float64 roundoff.
+    * ``backend="device"`` — the genome rows themselves are the program
+      input: candidates are encoded to stacked ``(K, n_layers)`` /
+      ``(K, n_slots)`` arrays and everything downstream — segment
+      boundaries, NoC flow structures, pricing — runs inside one jitted
+      program (:func:`price_population_device`).  Same float64-roundoff
+      parity as ``vmap``; this is the pricer the device-resident search
+      engine (``repro.core.search``, ``engine="device"``) keeps entirely
+      on the accelerator.
     """
     cands = list(candidates)
     if not cands:
@@ -388,6 +416,10 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                                         precomputed=precomputed)
     if backend == "vmap":
         return price_population_vmap(net, profile, cache, cands)
+    if backend == "device":
+        cores, perm = _pairs_to_rows(cands, len(cache.layers),
+                                     profile.n_cores)
+        return price_population_device(net, profile, cache, cores, perm)
     if backend != "numpy":
         raise ValueError(f"unknown population backend {backend!r}")
     n_layers = len(cache.layers)
@@ -768,13 +800,21 @@ def price_population_vmap(net: SimNetwork, profile: ChipProfile,
     pricer: _VmapPricer = cache.vmap_pricer
     batch = build_population_batch(cache, net, profile, pairs)
     out = pricer.price(batch)
+    return _assemble_reports(out, batch.n_logical, cache,
+                             pricer.weight_density)
+
+
+def _assemble_reports(out, n_logical, cache: PricingCache,
+                      w_density: float) -> list[SimReport]:
+    """Host-side :class:`SimReport` assembly shared by the vmap and device
+    population backends: ``out`` is the pricer's host dict with a leading
+    population axis, ``n_logical`` the (K,) live-core counts."""
     T = cache.T
     outputs = cache.outputs
-    w_density = pricer.weight_density
     stage_names = ("memory", "compute", "traffic", "barrier")
     reports = []
-    for k, (part, _) in enumerate(pairs):
-        n = batch.n_logical[k]
+    for k in range(len(n_logical)):
+        n = int(n_logical[k])
         votes = out["votes"][k]
 
         def _stats(total, mx, n_act):
@@ -808,7 +848,7 @@ def price_population_vmap(net: SimNetwork, profile: ChipProfile,
             max_synops=float(out["max_synops"][k]),
             max_acts=float(out["max_acts"][k]),
             max_link_load=link_mean,
-            n_cores_active=part.total_cores,
+            n_cores_active=n,
             outputs=outputs,
             per_core_synops=out["mean_synops"][k, :n],
             per_core_acts=out["mean_acts"][k, :n],
@@ -816,6 +856,162 @@ def price_population_vmap(net: SimNetwork, profile: ChipProfile,
             bottleneck_stage=stage_names[int(np.argmax(votes))],
         ))
     return reports
+
+
+# ------------------------------------------------------------- device backend
+#
+# The device-resident population pricer: where the vmap backend still
+# assembles its padded batch structures (segment boundaries, flow matrices)
+# on host per generation, this path takes the raw genome arrays —
+# (K, n_layers) core counts + (K, n_slots) slot permutations — as the
+# program input and derives EVERYTHING on device: per-core layer ids and
+# cumsum gather indices from an integer decode of the core-count rows, and
+# the NoC (PL, ph, dup) structures from a pure-jnp scatter/fold
+# (:func:`repro.neuromorphic.noc.flow_structures_rows`).  Because the
+# decode is shape-static it traces into larger jitted programs — the
+# device-resident evolutionary search keeps survivor genomes on the
+# accelerator across generations and re-prices them without any host sync.
+#
+# Boundary parity: ``Partition.boundaries`` is ``np.linspace(0, n, c+1)
+# .astype(int)`` = ``int(i * (n/c))`` with the endpoint pinned to ``n``;
+# the decode reproduces exactly that float64 arithmetic, so the gathered
+# cumsum indices are identical to the host paths' and pricing agrees with
+# the vmap backend bit-for-bit (and with NumPy to float64 roundoff).
+
+
+class DevicePopulationPricer:
+    """Genome-array population pricer bound to one :class:`PricingCache`.
+
+    ``price(cores, perm)`` accepts already-on-device (or host) stacked
+    genome rows and returns the pricing dict; :meth:`price_row` is the
+    traced single-genome program for composition into larger jitted
+    functions (the device search engine vmaps it inside its generation
+    step).  Beyond the :class:`_VmapPricer` outputs it adds the
+    mutation-policy fields the search consumes on device: ``stage``
+    (argmax of the bottleneck votes, memory/compute/traffic/barrier order)
+    and ``hot_mem``/``hot_act`` (layer of the max-loaded core).
+    """
+
+    def __init__(self, net: SimNetwork, profile: ChipProfile,
+                 cache: PricingCache):
+        if cache.vmap_pricer is None:
+            cache.vmap_pricer = _VmapPricer(net, profile, cache)
+        self.base: _VmapPricer = cache.vmap_pricer
+        self.profile = profile
+        self.n_layers = len(cache.layers)
+        self.n_pad = population_pad_width(net, profile)
+        rows, cols = profile.grid
+        self.cpr = max(1, profile.n_cores // (rows * cols))
+        widths = np.asarray([lp.n_neurons + 1 for lp in cache.layers])
+        with enable_x64():
+            self.block_off = jnp.asarray(
+                np.concatenate([[0], np.cumsum(widths)])[:-1]
+                .astype(np.int32))
+            self.n_neurons_vec = jnp.asarray(
+                np.asarray([lp.n_neurons for lp in cache.layers], np.int32))
+            inc3, hops2 = incidence_tables(profile.grid)
+            self.inc3 = jnp.asarray(inc3)
+            self.hops2 = jnp.asarray(hops2)
+        self._fn = jax.jit(jax.vmap(self.price_row))
+
+    def structures_row(self, cores_row, perm_row):
+        """(n_layers,) cores + (n_slots,) perm -> the padded per-core
+        pricing structures of :class:`PopulationBatch`, all on device."""
+        L, ncap = self.n_layers, self.n_pad
+        csum = jnp.cumsum(cores_row)                        # (L,)
+        total = csum[-1]
+        j = jnp.arange(ncap)
+        alive = j < total
+        lid = jnp.minimum(jnp.searchsorted(csum, j, side="right"),
+                          L - 1).astype(jnp.int32)
+        within = j - (csum - cores_row)[lid]                # index in layer
+        n_l = self.n_neurons_vec[lid]
+        c_l = cores_row[lid]
+        # same float64 arithmetic as np.linspace(0, n, c+1).astype(int)
+        step = n_l.astype(jnp.float64) / c_l.astype(jnp.float64)
+        lo_loc = (within.astype(jnp.float64) * step).astype(jnp.int32)
+        hi_loc = jnp.where(within + 1 == c_l, n_l,
+                           ((within + 1).astype(jnp.float64) * step)
+                           .astype(jnp.int32))
+        lid = jnp.where(alive, lid, 0)
+        seg_lo = jnp.where(alive, self.block_off[lid] + lo_loc, 0) \
+            .astype(jnp.int32)
+        seg_hi = jnp.where(alive, self.block_off[lid] + hi_loc, 0) \
+            .astype(jnp.int32)
+        neurons = jnp.where(alive, hi_loc - lo_loc, 0).astype(jnp.float64)
+        mask = alive.astype(jnp.float64)
+        router = jnp.where(alive, perm_row[:ncap] // self.cpr, 0) \
+            .astype(jnp.int32)
+        PL, ph, dup = flow_structures_rows(lid, router, mask, L,
+                                           self.inc3, self.hops2)
+        return mask, lid, seg_lo, seg_hi, neurons, PL, ph, dup
+
+    def price_row(self, cores_row, perm_row):
+        """The traced per-genome pricing program (vmap/jit composable)."""
+        mask, lid, seg_lo, seg_hi, neurons, PL, ph, dup = \
+            self.structures_row(cores_row, perm_row)
+        out = self.base._price_one(mask, lid, seg_lo, seg_hi, neurons,
+                                   PL, ph, dup)
+        out["stage"] = jnp.argmax(out["votes"]).astype(jnp.int32)
+        out["hot_mem"] = lid[jnp.argmax(out["mean_synops"])]
+        out["hot_act"] = lid[jnp.argmax(out["mean_acts"])]
+        return out
+
+    def price(self, cores, perm, *, device: bool = False) -> dict:
+        """Price stacked genome rows (host or device arrays).  Returns the
+        pricing dict on host (``device=False``, default) or device-resident
+        (``device=True`` — no transfer, for callers that keep going on
+        device)."""
+        with enable_x64():
+            out = self._fn(jnp.asarray(cores, jnp.int32),
+                           jnp.asarray(perm, jnp.int32))
+        return out if device else jax.device_get(out)
+
+
+def device_pricer(net: SimNetwork, profile: ChipProfile,
+                  cache: PricingCache) -> DevicePopulationPricer:
+    """The cache's :class:`DevicePopulationPricer` (built on first use; a
+    cache is bound to one (net, xs, profile) workload, so one pricer —
+    and its compiled programs — serves every population it prices)."""
+    if cache.device_pricer_obj is None:
+        cache.device_pricer_obj = DevicePopulationPricer(net, profile, cache)
+    return cache.device_pricer_obj
+
+
+def _pairs_to_rows(pairs, n_layers: int,
+                   n_slots: int) -> tuple[np.ndarray, np.ndarray]:
+    """(Partition, Mapping) pairs -> stacked fixed-shape genome rows; the
+    permutation tail (unexpressed slots) is filled ascending, mirroring
+    ``repro.core.search.encode``."""
+    K = len(pairs)
+    cores = np.zeros((K, n_layers), np.int32)
+    perm = np.zeros((K, n_slots), np.int32)
+    for k, (part, mapping) in enumerate(pairs):
+        cores[k] = part.cores
+        used = [int(p) for p in mapping.phys]
+        taken = set(used)
+        perm[k] = used + [s for s in range(n_slots) if s not in taken]
+    return cores, perm
+
+
+def price_population_device(net: SimNetwork, profile: ChipProfile,
+                            cache: PricingCache, cores,
+                            perm) -> list[SimReport]:
+    """Device-resident re-pricing entry point: price already-stacked (and
+    possibly already-on-device) genome rows — ``cores`` (K, n_layers),
+    ``perm`` (K, n_slots) — and assemble host :class:`SimReport`\\ s.
+
+    This is the report-producing wrapper over
+    :meth:`DevicePopulationPricer.price`; loops that stay on device (the
+    ``engine="device"`` search) skip it and compose
+    :meth:`DevicePopulationPricer.price_row` into their own jitted step,
+    only materializing reports for the candidates they return.
+    """
+    pricer = device_pricer(net, profile, cache)
+    out = pricer.price(cores, perm)
+    n_logical = np.asarray(jax.device_get(cores), np.int64).sum(axis=1)
+    return _assemble_reports(out, n_logical, cache,
+                             pricer.base.weight_density)
 
 
 def _simulate_reference(net: SimNetwork, xs: np.ndarray,

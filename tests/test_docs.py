@@ -1,0 +1,73 @@
+"""Executable-docs suite: every fenced ``python`` block in ``README.md``
+and ``docs/*.md`` is executed, so documentation cannot silently rot when
+the API moves (the PR-3 lesson).
+
+Contract for doc authors:
+
+* Blocks fenced as ```` ```python ```` are RUN, top to bottom, one shared
+  namespace per file — later blocks may use names bound by earlier ones.
+* The namespace is pre-seeded with the **doc prelude**: a tiny priced
+  workload every snippet may assume —
+  ``np`` (NumPy), ``net`` / ``xs`` (a 3-layer fc ``SimNetwork`` + inputs),
+  ``prof`` / ``profile`` (``loihi2_like()``), ``part`` / ``mapping``
+  (its minimal partition, strided), and ``evaluator`` (a
+  ``SimEvaluator`` over the workload).
+* Illustrative non-code (ascii diagrams, shapes, pseudo-signatures) must
+  use a plain ``` or ```text fence instead.
+
+Marked ``quick`` so the CI quick path (and ``pytest -m quick``) always
+gates the docs.
+"""
+
+import pathlib
+import re
+
+import pytest
+
+quick = pytest.mark.quick
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+DOC_FILES = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+FENCE_RE = re.compile(r"```python[ \t]*\n(.*?)^```", re.S | re.M)
+
+
+def _prelude() -> dict:
+    """The documented namespace every snippet may assume (kept deliberately
+    tiny so the whole docs suite runs in seconds)."""
+    import numpy as np
+
+    from repro.core.partitioner import SimEvaluator
+    from repro.neuromorphic import (fc_network, loihi2_like, make_inputs,
+                                    minimal_partition, strided_mapping)
+
+    net = fc_network([32, 24, 16], weight_density=0.6, seed=0)
+    xs = make_inputs(32, 0.4, 3, seed=1)
+    prof = loihi2_like()
+    part = minimal_partition(net, prof)
+    mapping = strided_mapping(part, prof)
+    evaluator = SimEvaluator(net, xs, prof)
+    return dict(np=np, net=net, xs=xs, prof=prof, profile=prof, part=part,
+                mapping=mapping, evaluator=evaluator)
+
+
+def test_doc_files_exist():
+    assert (ROOT / "README.md").exists()
+    assert len(DOC_FILES) >= 6, [p.name for p in DOC_FILES]
+
+
+@quick
+@pytest.mark.parametrize("path", DOC_FILES, ids=lambda p: p.name)
+def test_doc_snippets_execute(path):
+    text = path.read_text()
+    blocks = FENCE_RE.findall(text)
+    if not blocks:
+        pytest.skip(f"{path.name}: no fenced python blocks")
+    ns = _prelude()
+    for i, block in enumerate(blocks):
+        code = compile(block, f"{path.name}[python block {i}]", "exec")
+        try:
+            exec(code, ns)
+        except Exception as e:           # pragma: no cover - failure path
+            pytest.fail(
+                f"{path.name}, python block {i} failed: {type(e).__name__}: "
+                f"{e}\n--- block ---\n{block}")

@@ -29,7 +29,8 @@ from repro.neuromorphic.noc import (_flow_matrix, _pair_hops, _path_incidence,
                                     router_incidence_population)
 from repro.neuromorphic.timestep import (build_population_batch,
                                          population_pad_width,
-                                         precompute_pricing)
+                                         precompute_pricing,
+                                         price_population_device)
 
 quick = pytest.mark.quick
 
@@ -287,6 +288,101 @@ class TestVmapBackend:
             simulate_population(net, xs, prof,
                                 [(p0, ordered_mapping(p0, prof))],
                                 backend="tpu")
+
+
+class TestDeviceBackend:
+    """The ``backend="device"`` pricing path: genome arrays in, the padded
+    batch structures derived on device — same float64-roundoff parity
+    contract as the vmap backend, and bit-identical to vmap itself (the
+    two share the jitted pricing program; only structure construction
+    differs, and structures are exact integers)."""
+
+    @quick
+    def test_fc_parity_with_numpy_and_vmap(self):
+        net, xs = fc_workload()
+        prof = loihi2_like()
+        rng = np.random.default_rng(21)
+        pairs = [decode(c) for c in seeded_population(net, prof, size=12,
+                                                      rng=rng)]
+        r_np = simulate_population(net, xs, prof, pairs)
+        r_dev = simulate_population(net, xs, prof, pairs, backend="device")
+        r_vm = simulate_population(net, xs, prof, pairs, backend="vmap")
+        for a, b, c in zip(r_np, r_dev, r_vm):
+            _assert_reports_close(a, b)
+            assert b.time_per_step == c.time_per_step
+            assert b.energy_per_step == c.energy_per_step
+
+    @quick
+    def test_empty_core_segments(self):
+        net = fc_network([16, 6, 8], weight_density=1.0, seed=19)
+        xs = make_inputs(16, 0.8, 3, seed=20)
+        prof = loihi2_like()
+        pairs = [(Partition((7, 2)), strided_mapping(Partition((7, 2)),
+                                                     prof))]
+        for (p, m), rp in zip(pairs, simulate_population(net, xs, prof,
+                                                         pairs,
+                                                         backend="device")):
+            _assert_reports_close(rp, simulate(net, xs, prof, p, m))
+
+    def test_async_platform_parity(self):
+        prof = speck_like()
+        rng = np.random.default_rng(7)
+        layers = []
+        h = w = 8
+        c_prev = 2
+        for i, c in enumerate((4, 4)):
+            wgt = rng.normal(0, 1 / 3.0,
+                             (3, 3, c_prev, c)).astype(np.float32)
+            layers.append(SimLayer(name=f"c{i}", kind="conv", weights=wgt,
+                                   stride=2, in_hw=(h, w), neuron_model="if",
+                                   threshold=1.0))
+            h, w, c_prev = h // 2, w // 2, c
+        net = SimNetwork(layers=layers, in_size=8 * 8 * 2)
+        xs = make_inputs(net.in_size, 0.4, 3, seed=8)
+        p = minimal_partition(net, prof)
+        pairs = [(p, ordered_mapping(p, prof))]
+        for (pp, m), rp in zip(pairs, simulate_population(net, xs, prof,
+                                                          pairs,
+                                                          backend="device")):
+            _assert_reports_close(rp, simulate(net, xs, prof, pp, m))
+
+    @quick
+    def test_accepts_on_device_genome_arrays(self):
+        """price_population_device is the re-pricing entry point for
+        populations that already live on the accelerator: jnp inputs, no
+        pre-built batch."""
+        import jax.numpy as jnp
+
+        from repro.core.search import Population
+        net, xs = fc_workload(steps=2)
+        prof = loihi2_like()
+        cache = precompute_pricing(net, xs, prof)
+        rng = np.random.default_rng(23)
+        cands = seeded_population(net, prof, size=6, rng=rng)
+        pop = Population.from_candidates(cands)
+        reports = price_population_device(net, prof, cache,
+                                          jnp.asarray(pop.cores),
+                                          jnp.asarray(pop.perm))
+        r_np = simulate_population(net, xs, prof,
+                                   [decode(c) for c in cands], cache=cache)
+        for a, b in zip(r_np, reports):
+            _assert_reports_close(a, b)
+
+    @quick
+    def test_evaluator_device_backend_counts_and_matches(self):
+        net, xs = fc_workload(steps=2)
+        prof = loihi2_like()
+        ev_np = SimEvaluator(net, xs, prof)
+        ev_dev = SimEvaluator(net, xs, prof, cache=ev_np.cache,
+                              population_backend="device")
+        p0 = minimal_partition(net, prof)
+        pairs = [(p0, strided_mapping(p0, prof)),
+                 (p0.split(1), ordered_mapping(p0.split(1), prof))]
+        a = ev_np.evaluate_population(pairs)
+        b = ev_dev.evaluate_population(pairs)
+        assert ev_dev.n_evals == 2
+        for ra, rb in zip(a, b):
+            _assert_reports_close(ra, rb)
 
 
 class TestTensorFirstRoundTrip:
