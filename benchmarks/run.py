@@ -1,13 +1,15 @@
 """Benchmark driver: one experiment per paper table/figure + the TPU
 roofline table + the engine/search microbenchmarks.
 
-``python -m benchmarks.run [--quick] [--smoke] [--only NAME] [--engine E]``
+``python -m benchmarks.run [--quick] [--smoke] [--only NAME] [--engine E]
+[--compute C]``
 
 ``--quick`` shrinks every experiment; ``--smoke`` (implies ``--quick``)
 shrinks the expensive ones further so the WHOLE suite — including the
 mapping-search head-to-head — finishes in a couple of minutes, as a CI
 smoke path.  ``--engine`` flips ``repro.neuromorphic.timestep.DEFAULT_ENGINE``
-for every experiment in the process.
+and ``--compute`` flips ``repro.neuromorphic.compute.DEFAULT_COMPUTE`` for
+every experiment in the process.
 """
 
 from __future__ import annotations
@@ -28,6 +30,10 @@ def main(argv=None):
                     choices=("batched", "reference"),
                     help="simulator engine for every experiment "
                          "(default: layer-major batched)")
+    ap.add_argument("--compute", default=None,
+                    choices=("dense", "event"),
+                    help="per-layer synaptic compute backend for every "
+                         "experiment (default: dense)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -38,6 +44,9 @@ def main(argv=None):
     if args.engine:
         from repro.neuromorphic import timestep
         timestep.DEFAULT_ENGINE = args.engine
+    if args.compute:
+        from repro.neuromorphic import compute
+        compute.DEFAULT_COMPUTE = args.compute
 
     from benchmarks import (act_schedules, compute_floor, max_synops,
                             search_mapping, sim_speed, stage1_sparsity,

@@ -71,14 +71,20 @@ def _pricing_throughput(net, xs, prof, *, pop: int, repeats: int,
 
 
 def _generation_throughput(net, xs, prof, *, pop: int, gens: int,
-                           seed: int = 0) -> dict:
+                           seed: int = 0,
+                           device_pops: tuple = ()) -> dict:
     """Full-generation throughput of the three search engines on one seeded
     population: numpy engine + numpy pricing, numpy engine + vmap pricing
     (the "vmap-pricing-only" arm — the generation loop is still
     per-offspring host Python), and the device-resident engine.  Each arm
     runs once to warm jit/flow caches, then is timed over a ``gens``-
     generation search; throughput counts generations (and offspring
-    pricings) per second."""
+    pricings) per second.
+
+    ``device_pops`` adds device-engine-only points at larger populations
+    (the host engines would dominate the wall clock there) — the scaling
+    regime the rank-capped Pareto peeling and the batched archive update
+    unlock; recorded as ``device_pop{K}_gens_per_sec``."""
     import numpy as np
     shared = SimEvaluator(net, xs, prof)
     rng = np.random.default_rng(seed)
@@ -105,6 +111,23 @@ def _generation_throughput(net, xs, prof, *, pop: int, gens: int,
                                      / out["vmap_gens_per_sec"])
     out["device_speedup_vs_numpy"] = (out["device_gens_per_sec"]
                                       / out["numpy_gens_per_sec"])
+    for big in device_pops:
+        big_seeds = seeded_population(net, prof, size=big,
+                                      rng=np.random.default_rng(seed + 1))
+        def run_big(n_gens):
+            ev = SimEvaluator(net, xs, prof, cache=shared.cache,
+                              population_backend="vmap")
+            return evolutionary_search(
+                net, prof, ev, population_size=len(big_seeds),
+                generations=n_gens, seed=seed,
+                seed_candidates=list(big_seeds), engine="device")
+        run_big(1)                        # warm jit at this population
+        t0 = time.perf_counter()
+        res = run_big(gens)
+        dt = time.perf_counter() - t0
+        out[f"device_pop{big}_size"] = len(big_seeds)
+        out[f"device_pop{big}_gens_per_sec"] = gens / max(dt, 1e-9)
+        out[f"device_pop{big}_evals_per_sec"] = res.n_evals / max(dt, 1e-9)
     return out
 
 
@@ -176,9 +199,11 @@ def run(quick: bool = False) -> dict:
     price_reps = 2 if smoke else (5 if quick else 10)
     # the generation head-to-head: the device engine's advantage is the
     # amortized per-offspring host work, so it is measured at a large
-    # population (>= 256 outside the CI smoke path)
+    # population (>= 256 outside the CI smoke path); the device-only
+    # pop=1024 point probes the rank-capped-peeling scaling regime
     gen_pop = 64 if smoke else 256
     gen_gens = 2 if smoke else 3
+    device_pops = () if smoke else (1024,)
 
     out = {}
     s5, prof = W.s5_sim(weight_density=0.5, seed=0, weight_format="sparse")
@@ -189,7 +214,8 @@ def run(quick: bool = False) -> dict:
                                                repeats=price_reps)
     out["s5"]["generation"] = _generation_throughput(s5, xs, prof,
                                                      pop=gen_pop,
-                                                     gens=gen_gens)
+                                                     gens=gen_gens,
+                                                     device_pops=device_pops)
 
     pnet, pprof = W.pilotnet_sim(weight_density=0.6, seed=1)
     pxs = W.sim_inputs(pnet, 0.3, max(steps - 1, 2), seed=3)
@@ -245,5 +271,14 @@ def report(res: dict) -> str:
                 f"vmap {ge['vmap_gens_per_sec']:6.2f} gen/s, "
                 f"device {ge['device_gens_per_sec']:6.2f} gen/s "
                 f"-> device {ge['device_speedup_vs_vmap']:.2f}x vs vmap")
+            for key in ge:
+                if key.startswith("device_pop") and key.endswith(
+                        "_gens_per_sec"):
+                    pop_k = key[len("device_pop"):-len("_gens_per_sec")]
+                    lines.append(
+                        f"  {'':8s} device engine @ pop={pop_k}: "
+                        f"{ge[key]:6.2f} gen/s "
+                        f"({ge[f'device_pop{pop_k}_evals_per_sec']:8.1f} "
+                        f"evals/s)")
     lines.append(f"  wrote {BENCH_PATH}")
     return "\n".join(lines)

@@ -1,11 +1,22 @@
 """Simulator-engine microbenchmark: step-major reference vs layer-major
-batched execution on fixed fc and conv workloads.
+batched execution, plus dense vs event-driven compute backends, on fixed
+fc and conv workloads.
 
-Writes ``BENCH_sim.json`` (steps/sec per engine + speedup) at the repo
-root.  The fc workload is the acceptance gate for the layer-major engine
-(>= 10x steps/sec); the equivalence suite
-(``tests/test_sim_equivalence.py``) proves the two engines agree exactly,
-so the speedup is free.
+Writes ``BENCH_sim.json`` at the repo root with two sections:
+
+* engine rows (``fc`` / ``conv``) — steps/sec per engine + speedup.  The
+  fc workload is the acceptance gate for the layer-major engine (>= 10x
+  steps/sec); the equivalence suite (``tests/test_sim_equivalence.py``)
+  proves the two engines agree exactly, so the speedup is free.
+* ``compute`` — dense vs event :class:`~repro.neuromorphic.compute.
+  LayerCompute` backends across programmed activation densities
+  (0.01–0.5) on characterization-mode fc and conv workloads (§V-A message
+  gates; the conv workload programs *channel-structured* activity, the
+  granularity event execution exploits on convs).  The headline is the
+  event backend's steps/sec advantage *growing as density falls* — the
+  simulator's own execution cost now scales with events, like the
+  hardware it models — while ``tests/test_compute_backends.py`` proves
+  both backends price identically.
 """
 
 from __future__ import annotations
@@ -13,11 +24,17 @@ from __future__ import annotations
 import json
 import time
 
+import numpy as np
+
 from benchmarks import workloads as W
-from repro.neuromorphic import fc_network, loihi2_like, make_inputs
+from repro.neuromorphic import (fc_network, loihi2_like, make_inputs,
+                                programmed_fc_network)
 from repro.neuromorphic.timestep import simulate
 
 BENCH_PATH = "BENCH_sim.json"
+
+#: programmed activation densities of the compute-backend sweep
+COMPUTE_DENSITIES = (0.01, 0.05, 0.1, 0.2, 0.5)
 
 
 def _time_engine(net, xs, prof, engine: str, repeats: int = 3) -> float:
@@ -45,6 +62,82 @@ def _bench(name: str, net, xs, prof, repeats: int) -> dict:
     return row
 
 
+def _time_run_batch_pair(net, xs, repeats: int) -> tuple[float, float]:
+    """Best-of-N wall-clock of the functional layer-major run — the seam
+    the compute backends plug into — for the dense and event backends,
+    interleaved so host-load drift biases neither arm."""
+    best = {"dense": float("inf"), "event": float("inf")}
+    for backend in best:
+        net.run_batch(xs, compute=backend)       # warm jit / weight caches
+    for _ in range(repeats):
+        for backend in best:
+            t0 = time.perf_counter()
+            net.run_batch(xs, compute=backend)
+            best[backend] = min(best[backend], time.perf_counter() - t0)
+    return best["dense"], best["event"]
+
+
+def _compute_fc_workload(density: float, steps: int, quick: bool):
+    """Characterization-mode fc stack: per-layer message gates program the
+    activation density exactly (paper §V-A); the input layer is kept small
+    so the gated layers carry the compute."""
+    sizes = ([128, 384, 384, 256] if quick
+             else [256, 1024, 1024, 1024, 512])
+    net = programmed_fc_network(sizes, weight_densities=[1.0] * (len(sizes) - 1),
+                                act_densities=[density] * (len(sizes) - 1),
+                                seed=0)
+    xs = make_inputs(sizes[0], density, steps, seed=1)
+    return net, xs
+
+
+def _compute_conv_workload(density: float, steps: int, quick: bool):
+    """Channel-structured characterization conv: whole feature maps are
+    gated on/off (the structure event-driven conv execution exploits —
+    quiet channels fetch no weight taps), and the input programs the same
+    per-channel activity."""
+    hw = (16, 16) if quick else (32, 32)
+    cin = 4 if quick else 8
+    channels = (16, 32) if quick else (32, 64, 64)
+    net = W.conv_net(in_hw=hw, cin=cin, channels=channels, fc_out=16,
+                     force_active=True, seed=0)
+    rng = np.random.default_rng(7)
+    for l in net.layers:
+        if l.kind != "conv":
+            continue
+        cout = l.weights.shape[3]
+        chm = np.zeros(cout, np.float32)
+        chm[rng.choice(cout, max(1, round(density * cout)),
+                       replace=False)] = 1.0
+        l.msg_gate = np.repeat(chm, l.out_hw[0] * l.out_hw[1])
+    xs = make_inputs(net.in_size, 1.0, steps, seed=1)
+    in_chm = np.zeros(cin, np.float32)
+    in_chm[rng.choice(cin, max(1, round(density * cin)), replace=False)] = 1.0
+    xs = (xs.reshape(steps, cin, -1) * in_chm[None, :, None]).reshape(
+        steps, -1)
+    return net, xs
+
+
+def _bench_compute(quick: bool, repeats: int) -> dict:
+    """Dense vs event backend steps/sec across programmed densities."""
+    out = {}
+    for name, make, steps in (
+            ("fc", _compute_fc_workload, 32 if quick else 128),
+            ("conv", _compute_conv_workload, 8 if quick else 32)):
+        rows = []
+        for d in COMPUTE_DENSITIES:
+            net, xs = make(d, steps, quick)
+            t_dense, t_event = _time_run_batch_pair(net, xs, repeats)
+            rows.append({
+                "density": d,
+                "steps": steps,
+                "dense_steps_per_sec": steps / t_dense,
+                "event_steps_per_sec": steps / t_event,
+                "event_speedup": t_dense / t_event,
+            })
+        out[name] = rows
+    return out
+
+
 def run(quick: bool = False) -> dict:
     steps = 64 if quick else 256
     repeats = 2 if quick else 3
@@ -59,6 +152,10 @@ def run(quick: bool = False) -> dict:
     out = {
         "fc": _bench("fc", fc, fc_xs, loihi2_like(), repeats),
         "conv": _bench("conv", conv, conv_xs, conv_prof, repeats),
+        # full runs average harder (noisy shared hosts); quick/smoke keeps
+        # its reduced repeat count
+        "compute": _bench_compute(quick, repeats if quick
+                                  else max(repeats, 5)),
     }
     with open(BENCH_PATH, "w") as f:
         json.dump(out, f, indent=1)
@@ -74,5 +171,16 @@ def report(res: dict) -> str:
             f"ref={r['ref_steps_per_sec']:8.1f} steps/s  "
             f"batched={r['batched_steps_per_sec']:10.1f} steps/s  "
             f"-> {r['speedup']:.1f}x")
+    comp = res.get("compute")
+    if comp:
+        lines.append("  compute backends — dense vs event "
+                     "(programmed act density)")
+        for name in ("fc", "conv"):
+            for r in comp[name]:
+                lines.append(
+                    f"    {name:5s} d={r['density']:<5g} "
+                    f"dense={r['dense_steps_per_sec']:9.1f} steps/s  "
+                    f"event={r['event_steps_per_sec']:9.1f} steps/s  "
+                    f"-> {r['event_speedup']:.2f}x")
     lines.append(f"  wrote {BENCH_PATH}")
     return "\n".join(lines)

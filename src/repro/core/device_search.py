@@ -171,22 +171,40 @@ def mutate_rows_array(xp, pc, pp, pstage, phot_mem, phot_act, draws,
     return cores.astype(xp.int32), perm.astype(xp.int32)
 
 
-def pareto_ranks_array(t, e):
+def pareto_ranks_array(t, e, n_keep: int | None = None):
     """jnp nondomination ranks — the jittable (lax.while_loop) counterpart
-    of :func:`repro.core.search.pareto_ranks`, same peeling algorithm."""
+    of :func:`repro.core.search.pareto_ranks`, same peeling algorithm.
+
+    ``n_keep`` (a static Python int) caps the peeling for survival
+    selection: the while_loop stops once at least ``n_keep`` rows are
+    ranked — enough to fill every survivor slot — instead of running the
+    O(K^2)-per-front peel over all K rows (the cost that dominated
+    generations at population >= 1k).  Unpeeled rows carry the sentinel
+    rank ``K``, which sorts after every real rank, so the
+    ``(rank, time, energy, index)`` survival order is unchanged below the
+    cutoff, and host and device agree rank-for-rank everywhere
+    (``tests/test_device_search.py``).  Documented deviation from
+    uncapped ranking: among the unpeeled (sentinel) rows the order falls
+    back to (time, energy), so when phenotype dedup pushes survival past
+    the cutoff — duplicate-heavy converged populations — the survivor
+    tail may differ from the uncapped engine's; elitism is unaffected
+    (rank 0 is always peeled first)."""
     dominated_by = ((t[None, :] <= t[:, None]) & (e[None, :] <= e[:, None])
                     & ((t[None, :] < t[:, None]) | (e[None, :] < e[:, None])))
     n = t.shape[0]
+    cap = n if n_keep is None else min(int(n_keep), n)
 
     def body(state):
-        ranks, remaining, r = state
+        ranks, remaining, r, peeled = state
         dom = (dominated_by & remaining[None, :]).sum(axis=1)
         frontier = remaining & (dom == 0)
-        return (jnp.where(frontier, r, ranks), remaining & ~frontier, r + 1)
+        return (jnp.where(frontier, r, ranks), remaining & ~frontier,
+                r + 1, peeled + frontier.sum().astype(jnp.int32))
 
-    ranks, _, _ = jax.lax.while_loop(
-        lambda s: s[1].any(), body,
-        (jnp.zeros(n, jnp.int32), jnp.ones(n, bool), jnp.int32(0)))
+    ranks, _, _, _ = jax.lax.while_loop(
+        lambda s: s[1].any() & (s[3] < cap), body,
+        (jnp.full(n, n, jnp.int32), jnp.ones(n, bool), jnp.int32(0),
+         jnp.int32(0)))
     return ranks
 
 
@@ -240,9 +258,11 @@ def survival_order_array(xp, cores, perm, times, energies, ranks,
 # program, and the two pricing paths.
 
 def _sorted_state(xp, rank_fn, cores, perm, out, idx_n):
-    """Price-output dict + genome rows -> survival-sorted state dict."""
+    """Price-output dict + genome rows -> survival-sorted state dict.
+    Ranking is capped at the survivor count ``idx_n`` — rows beyond the
+    cutoff only need a rank larger than every kept one."""
     t, e = out["times"], out["energies"]
-    ranks = rank_fn(t, e)
+    ranks = rank_fn(t, e, n_keep=idx_n)
     idx = survival_order_array(xp, cores, perm, t, e, ranks, idx_n)
     return dict(cores=cores[idx], perm=perm[idx], times=t[idx],
                 energies=e[idx], stage=out["stage"][idx],
@@ -477,10 +497,8 @@ def evolutionary_search_device(
     init_host = jax.device_get(init_out)
     seed_best_time = float(np.min(init_host["times"]))
     archive = EpsParetoArchive(pareto_eps)
-    for k in range(len(pop)):
-        archive.add(float(init_host["times"][k]),
-                    float(init_host["energies"][k]),
-                    pop.cores[k], pop.perm[k], None)
+    archive.update_batch(init_host["times"], init_host["energies"],
+                         pop.cores, pop.perm)
 
     first = jax.device_get({k: state[k] for k in ("times", "energies")})
     history = [GenStats(generation=0,
@@ -502,12 +520,12 @@ def evolutionary_search_device(
         evals_used += n_off
         _charge(evaluator, n_off)
         # the only per-generation host sync: tiny stats + the offspring
-        # batch for the epsilon-Pareto archive
+        # batch, absorbed by the epsilon-Pareto archive in ONE vectorized
+        # update (no per-offspring host Python anywhere in this loop)
         host = jax.device_get(dict(off=off, stats=stats))
         off_h, stats_h = host["off"], host["stats"]
-        for k in range(n_off):
-            archive.add(float(off_h["times"][k]), float(off_h["energies"][k]),
-                        off_h["cores"][k], off_h["perm"][k], None)
+        archive.update_batch(off_h["times"], off_h["energies"],
+                             off_h["cores"], off_h["perm"])
         history.append(GenStats(
             generation=gen,
             best_time=float(stats_h["best_time"]),

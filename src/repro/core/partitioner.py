@@ -83,14 +83,20 @@ class SimEvaluator:
 
     def __init__(self, net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                  *, engine: str | None = None, cache=None,
-                 population_backend: str = "numpy"):
+                 population_backend: str = "numpy", compute=None):
         from repro.neuromorphic import timestep
         self.net, self.xs, self.profile = net, xs, profile
         self.engine = engine or timestep.DEFAULT_ENGINE
         self.population_backend = population_backend
+        #: per-layer synaptic compute backend of the functional run
+        #: ("dense" / "event" / a LayerCompute instance; None -> the
+        #: process default) — counters are exact across backends, so the
+        #: cache and every report it prices are backend-agnostic
+        self.compute = compute
         # ``cache=`` shares one PricingCache between evaluators that only
         # differ in their evaluation counters (e.g. benchmark arms)
-        self.cache = (cache or precompute_pricing(net, xs, profile)
+        self.cache = (cache or precompute_pricing(net, xs, profile,
+                                                  compute=compute)
                       if self.engine == "batched" else None)
         self.n_evals = 0
 
@@ -100,7 +106,7 @@ class SimEvaluator:
             return price_candidate(self.net, self.profile, self.cache,
                                    part, mapping)
         return simulate(self.net, self.xs, self.profile, part, mapping,
-                        engine=self.engine)
+                        engine=self.engine, compute=self.compute)
 
     def evaluate_population(self, candidates) -> list[SimReport]:
         """Price a list of (partition, mapping) pairs; one stacked gather
@@ -113,7 +119,8 @@ class SimEvaluator:
                                        cands, cache=self.cache,
                                        backend=self.population_backend)
         return [simulate(self.net, self.xs, self.profile, p, m,
-                         engine=self.engine) for p, m in cands]
+                         engine=self.engine, compute=self.compute)
+                for p, m in cands]
 
 
 @dataclasses.dataclass

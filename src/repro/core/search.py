@@ -232,25 +232,40 @@ def move_tables(net: SimNetwork, profile: ChipProfile) -> MoveTables:
 
 # ---------------------------------------------------------------- fronts
 
-def pareto_ranks(times: np.ndarray, energies: np.ndarray) -> np.ndarray:
+def pareto_ranks(times: np.ndarray, energies: np.ndarray,
+                 n_keep: int | None = None) -> np.ndarray:
     """(K,) nondomination rank per candidate (0 = Pareto-optimal) under
     (time, energy) minimization.  The lexicographic (time, energy) minimum
     is always rank 0, so ordering by ``(rank, time, energy)`` preserves the
     PR-2 elitism guarantees while letting energy-efficient candidates
-    survive alongside equal-rank faster ones."""
+    survive alongside equal-rank faster ones.
+
+    ``n_keep`` caps the O(K^2)-per-front peeling for survival selection:
+    peeling stops once at least ``n_keep`` rows are ranked (enough to fill
+    every survivor slot), and every unpeeled row gets the sentinel rank
+    ``K`` — larger than any real rank, so capped and uncapped orderings
+    agree on everything below the cutoff (``tests/test_device_search.py``
+    asserts this against the device counterpart).  Ties among unpeeled
+    rows fall back to (time, energy) downstream, a documented deviation
+    from uncapped ranking that only matters when phenotype dedup reaches
+    past the cutoff (see :func:`repro.core.device_search.
+    pareto_ranks_array`)."""
     t = np.asarray(times, np.float64)
     e = np.asarray(energies, np.float64)
     n = t.size
+    cap = n if n_keep is None else min(int(n_keep), n)
     # dominated_by[i, j]: candidate j dominates candidate i
     dominated_by = ((t[None, :] <= t[:, None]) & (e[None, :] <= e[:, None])
                     & ((t[None, :] < t[:, None]) | (e[None, :] < e[:, None])))
-    ranks = np.zeros(n, int)
+    ranks = np.full(n, n, int)          # sentinel: never peeled
     remaining = np.ones(n, bool)
     r = 0
-    while remaining.any():
+    peeled = 0
+    while remaining.any() and peeled < cap:
         dom = (dominated_by & remaining[None, :]).sum(axis=1)
         frontier = remaining & (dom == 0)
         ranks[frontier] = r
+        peeled += int(frontier.sum())
         remaining &= ~frontier
         r += 1
     return ranks
@@ -300,9 +315,49 @@ class EpsParetoArchive:
 
     def update(self, pop: Population, times: np.ndarray,
                energies: np.ndarray, reports: list[SimReport]) -> None:
-        for k in range(len(pop)):
-            self.add(times[k], energies[k], pop.cores[k], pop.perm[k],
-                     reports[k])
+        self.update_batch(times, energies, pop.cores, pop.perm,
+                          reports=reports)
+
+    def update_batch(self, times, energies, cores, perm, *,
+                     reports: list | None = None) -> int:
+        """One vectorized per-generation update, exactly equivalent to
+        sequential :meth:`add` calls in batch order.
+
+        A single stacked epsilon-domination test against the pre-update
+        members culls the whole batch at once — in a converged search
+        nearly every offspring dies here, so the per-generation cost is
+        one (K, |archive|) comparison instead of K Python round-trips.
+        Only the surviving handful is admitted through :meth:`add`
+        (later survivors can be blocked by earlier admissions, which is
+        inherently ordered).
+
+        The prefilter stays exact under eviction: a point that evicts a
+        member plainly dominates it, hence epsilon-blocks at least
+        everything the evicted member blocked — so "blocked by a
+        pre-update member" implies "blocked at this point's turn" no
+        matter what the batch admits or evicts in between.  Returns the
+        number of points admitted.
+        """
+        times = np.asarray(times, np.float64)
+        energies = np.asarray(energies, np.float64)
+        K = times.shape[0]
+        if K == 0:
+            return 0
+        if self._items:
+            one_eps = 1.0 + self.eps
+            at = np.asarray([it["time"] for it in self._items])
+            ae = np.asarray([it["energy"] for it in self._items])
+            blocked = ((at[None, :] <= times[:, None] * one_eps)
+                       & (ae[None, :] <= energies[:, None] * one_eps)
+                       ).any(axis=1)
+        else:
+            blocked = np.zeros(K, bool)
+        added = 0
+        for k in np.flatnonzero(~blocked):
+            added += self.add(float(times[k]), float(energies[k]),
+                              cores[k], perm[k],
+                              reports[k] if reports is not None else None)
+        return added
 
     def front(self) -> tuple[list[Candidate], list[SimReport]]:
         """Archive contents sorted by time: (candidates, reports)."""

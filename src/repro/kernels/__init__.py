@@ -19,7 +19,9 @@ Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 oracle used by the test sweeps).
 """
 
-from repro.kernels.event_matmul.ops import block_activity, event_matmul
+from repro.kernels.event_matmul.ops import (block_activity, event_matmul,
+                                            event_matmul_pair, pad_compact)
 from repro.kernels.sigma_delta.ops import sigma_delta_encode
 
-__all__ = ["event_matmul", "block_activity", "sigma_delta_encode"]
+__all__ = ["event_matmul", "event_matmul_pair", "block_activity",
+           "pad_compact", "sigma_delta_encode"]

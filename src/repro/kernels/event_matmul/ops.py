@@ -30,6 +30,24 @@ def block_activity(x: jax.Array, threshold: float, bm: int = 128,
     return block_activity_ref(x, threshold, bm, bk)
 
 
+def pad_compact(x: jax.Array, threshold: float, bm: int = 128,
+                bk: int = 128) -> tuple[jax.Array, jax.Array, jax.Array,
+                                        jax.Array]:
+    """One pad, one activity map, one compaction — shared by every consumer.
+
+    Returns ``(xp, active, idx, cnt)``: the (bm, bk)-aligned operand, its
+    (Mb, Kb) bool activity map, and the compacted per-m-block active
+    k-tile indices + counts the kernel's scalar prefetch consumes.  This is
+    the single entry point through which :func:`block_activity` and
+    :func:`event_matmul` (and the simulator's event compute backend) derive
+    their tile structures, so no caller ever pays a second pad.
+    """
+    xp = _pad_to(x, (bm, bk))
+    active = block_activity_ref(xp, threshold, bm, bk)
+    idx, cnt = _compact_indices(active)
+    return xp, active, idx, cnt
+
+
 def _compact_indices(active: jax.Array) -> tuple[jax.Array, jax.Array]:
     """Per m-block, compact active k-block indices to the front.
 
@@ -85,10 +103,46 @@ def event_matmul(x: jax.Array, w: jax.Array, *, threshold: float = 0.0,
     K2, N = w.shape
     if K != K2:
         raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
-    xp = _pad_to(x, (bm, bk))
+    xp, _, idx, cnt = pad_compact(x, threshold, bm, bk)
     wp = _pad_to(w, (bk, bn))
-    active = block_activity(xp, threshold, bm, bk)   # xp aligned: no re-pad
-    idx, cnt = _compact_indices(active)
     out = event_matmul_pallas(xp, wp, idx, cnt, bm=bm, bk=bk, bn=bn,
                               out_dtype=x.dtype, interpret=interpret)
     return out[:M, :N]
+
+
+@functools.partial(jax.jit, static_argnames=("threshold", "bm", "bk", "bn",
+                                             "interpret"))
+def event_matmul_pair(x: jax.Array, m: jax.Array, w: jax.Array,
+                      wm: jax.Array, *, threshold: float = 0.0,
+                      bm: int = 128, bk: int = 128, bn: int = 128,
+                      interpret: bool | None = None
+                      ) -> tuple[jax.Array, jax.Array]:
+    """Batched (T, ·) entry point for the simulator's event backend: the
+    value matmul ``x @ w`` and the counter matmul ``m @ wm`` as ONE jitted
+    program, each skipping its own event-free (bm, bk) tiles.
+
+    ``x`` is the effective activation block (pre-activation GEMM input) and
+    ``m`` its 0/1 wire-event mask; the two share a sparsity pattern only
+    when no delta reconstruction is in play, so each operand gets its own
+    :func:`pad_compact` — but both kernel launches, both pads and both
+    compactions fuse into a single compiled program (one dispatch per
+    simulated layer instead of two).
+
+    Returns ``(y, macs)`` cropped to ``(x.shape[0], w.shape[1])``.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    M, K = x.shape
+    K2, N = w.shape
+    if K != K2 or m.shape != x.shape or wm.shape != w.shape:
+        raise ValueError(f"shape mismatch: {x.shape}/{m.shape} @ "
+                         f"{w.shape}/{wm.shape}")
+    xp, _, xi, xc = pad_compact(x, threshold, bm, bk)
+    mp, _, mi, mc = pad_compact(m, 0.0, bm, bk)
+    wp = _pad_to(w, (bk, bn))
+    wmp = _pad_to(wm, (bk, bn))
+    y = event_matmul_pallas(xp, wp, xi, xc, bm=bm, bk=bk, bn=bn,
+                            out_dtype=x.dtype, interpret=interpret)
+    macs = event_matmul_pallas(mp, wmp, mi, mc, bm=bm, bk=bk, bn=bn,
+                               out_dtype=m.dtype, interpret=interpret)
+    return y[:M, :N], macs[:M, :N]

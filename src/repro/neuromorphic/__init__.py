@@ -11,6 +11,9 @@ reporting).
 
 from repro.neuromorphic.platform import (ChipProfile, akd1000_like, loihi2_like,
                                          speck_like)
+from repro.neuromorphic.compute import (DenseCompute, EventCompute,
+                                        LayerCompute, get_compute,
+                                        register_compute)
 from repro.neuromorphic.network import (BatchCounters, SimLayer, SimNetwork,
                                         fc_network, make_inputs,
                                         programmed_fc_network)
@@ -32,6 +35,8 @@ from repro.neuromorphic.timestep import (DevicePopulationPricer,
 
 __all__ = [
     "ChipProfile", "akd1000_like", "loihi2_like", "speck_like",
+    "DenseCompute", "EventCompute", "LayerCompute", "get_compute",
+    "register_compute",
     "BatchCounters", "SimLayer", "SimNetwork", "fc_network", "make_inputs",
     "programmed_fc_network",
     "Partition", "minimal_partition",

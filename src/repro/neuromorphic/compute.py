@@ -1,0 +1,365 @@
+"""Pluggable per-layer synaptic-compute backends for the simulator.
+
+The simulator's hot path is the per-layer synaptic forward: consume the
+``(T, n_in)`` effective-activation block, produce the ``(T, n_out)``
+pre-activations plus the exact MAC / dense-fetch counter maps the cost
+model prices.  This module is the seam that makes that forward pluggable —
+:class:`SimLayer` (``repro.neuromorphic.network``) delegates every
+pre-activation GEMM / conv to a :class:`LayerCompute` backend instead of
+hard-coding dense math:
+
+* ``"dense"`` (:class:`DenseCompute`, the default) — the original jnp GEMM /
+  ``conv_general_dilated`` path, moved here verbatim.  It is the bit-exact
+  reference: every counter and every float op order is unchanged, so the
+  engine-parity suites (``tests/test_sim_equivalence.py``) and the pricing
+  caches are oblivious to the refactor.
+* ``"event"`` (:class:`EventCompute`) — event-driven execution in the
+  paper's sense: *"a message is only sent for a nonzero activation, and
+  only its weights are fetched"*.  Work scales with the number of events
+  instead of the dense shape.  Two kernel modes share one semantic
+  contract (``y == x @ w`` exactly where skipped work is genuinely
+  event-free, so outputs agree with dense to float roundoff and all
+  integer counters agree exactly):
+
+  - ``"pallas"`` — the block-sparse TPU kernel
+    (:func:`repro.kernels.event_matmul.ops.event_matmul_pair`): (bm, bk)
+    activation tiles with no events skip both the weight-tile DMA and the
+    MXU issue.  Interpret mode is auto-selected on CPU backends, so CI
+    executes the real kernel body on every push.
+  - ``"gather"`` — the column-granular host expression of the same
+    event contract: the time axis is cut into ``bm``-step tiles, each
+    tile's *union of active input columns* is compacted, and only those
+    columns' weight rows are fetched into one dense
+    ``(bm, k_tile) @ (k_tile, n_out)`` contraction.  Weight fetches and
+    MACs are proportional to activation density (the weight-row fetch is
+    amortized over the whole tile) — the hardware-faithful fast path on
+    hosts without an MXU.
+
+  ``mode="auto"`` picks ``pallas`` on TPU/GPU backends and ``gather`` on
+  CPU: the kernel where block-skipping pays, the density-proportional
+  gather where interpret-mode overhead would bury it.
+
+Conv layers run event-driven through an im2col view: a zero-copy
+``sliding_window_view`` lowers the SAME-padded strided conv to a
+``(T * oh * ow, cin * kh * kw)`` patch matrix, and the patch rows feed the
+same event matmul as fc layers — window positions whose receptive field
+holds no event fetch no weights, and input features (channel taps) that
+are quiet across a tile are never contracted.  The conv win is therefore
+largest for *structured* activation sparsity (quiet channels / feature
+maps), mirroring the paper's CNN weight-format finding that structure is
+what converts sparsity into skipped fetches.
+
+Backends are selected per call (``compute=`` on ``simulate`` /
+``precompute_pricing`` / ``SimEvaluator`` / ``SimNetwork.run_batch``) by
+name, by instance, or by the process-wide :data:`DEFAULT_COMPUTE`
+(``benchmarks/run.py --compute`` flips it globally, mirroring
+``--engine``).  ``docs/kernels.md`` documents the kernel contracts;
+``tests/test_compute_backends.py`` asserts the dense/event parity.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.event_matmul.ops import event_matmul_pair
+
+#: Backend used when a ``compute=`` argument is omitted.  ``"dense"`` is the
+#: bit-exact reference; ``benchmarks/run.py --compute`` overrides this
+#: module attribute globally, the supported way to flip every simulation in
+#: a process (same contract as ``timestep.DEFAULT_ENGINE``).
+DEFAULT_COMPUTE = "dense"
+
+
+class LayerCompute:
+    """Backend protocol: the per-layer synaptic forward over a time batch.
+
+    Implementations provide :meth:`fc_forward` and :meth:`conv_forward`;
+    both consume the full ``(T, n_in)`` effective-activation block plus the
+    0/1 wire-event mask and per-step message counts, and return
+    ``(pre, macs, fetches_dense)`` as ``(T, n_out)`` maps (channel-major
+    flat for conv, so contiguous core ranges stay meaningful).  The
+    single-step engine path is the same contract at ``T == 1``.
+
+    Contract every backend must honor (``tests/test_compute_backends.py``):
+
+    * ``macs`` and ``fetches_dense`` are exact event counts — integer-valued
+      and bit-identical across backends (counter sums stay well below the
+      2**24 float32 integer horizon);
+    * ``pre`` equals the dense reference to float roundoff (backends may
+      reassociate the contraction, so parity is rtol <= 1e-6, not bitwise).
+    """
+
+    name = "?"
+
+    def fc_forward(self, layer, x_eff: np.ndarray, act_mask: np.ndarray,
+                   msgs_in: np.ndarray):
+        raise NotImplementedError
+
+    def conv_forward(self, layer, x_eff: np.ndarray, act_mask: np.ndarray,
+                     msgs_in: np.ndarray):
+        raise NotImplementedError
+
+    def forward(self, layer, x_eff: np.ndarray, act_mask: np.ndarray,
+                msgs_in: np.ndarray):
+        """Dispatch on the layer kind; the one entry point SimLayer calls."""
+        if layer.kind == "fc":
+            return self.fc_forward(layer, x_eff, act_mask, msgs_in)
+        return self.conv_forward(layer, x_eff, act_mask, msgs_in)
+
+
+# ------------------------------------------------------------------- dense
+
+class DenseCompute(LayerCompute):
+    """The original dense path: one GEMM / one batched conv per layer.
+
+    Bit-exact reference — identical ops in identical order to the pre-seam
+    ``SimLayer`` implementation, so every existing parity suite and every
+    pricing cache sees unchanged numbers.
+    """
+
+    name = "dense"
+
+    def fc_forward(self, layer, x_eff, act_mask, msgs_in):
+        pre = x_eff @ layer.weights
+        macs = act_mask @ layer.w_mask
+        fetches = np.broadcast_to(msgs_in[:, None].astype(np.float32),
+                                  macs.shape)
+        return pre, macs, fetches
+
+    def conv_forward(self, layer, x_eff, act_mask, msgs_in):
+        """All-timesteps conv: one ``conv_general_dilated`` with batch = T
+        per (values, mask, ones) kernel.  Flat boundaries are channel-major
+        ((c, h, w)) on BOTH sides so conv->conv stacks keep consistent
+        receptive fields."""
+        T = x_eff.shape[0]
+        h, w = layer.in_hw
+        cin = layer.weights.shape[2]
+        to_nhwc = lambda a: np.transpose(a.reshape(T, cin, h, w),
+                                         (0, 2, 3, 1))
+        x4 = jnp.asarray(to_nhwc(x_eff))
+        m4 = jnp.asarray(to_nhwc(act_mask))
+        wj, wmask, wones = layer._conv_kernels
+
+        conv = lambda lhs, rhs: jax.lax.conv_general_dilated(
+            lhs, rhs, window_strides=(layer.stride, layer.stride),
+            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
+        pre = np.asarray(conv(x4, wj))                 # (T, oh, ow, cout)
+        macs = np.asarray(conv(m4, wmask))
+        fetches = np.asarray(conv(m4, wones))
+        to_flat = lambda a: np.transpose(a, (0, 3, 1, 2)).reshape(T, -1)
+        return to_flat(pre), to_flat(macs), to_flat(fetches)
+
+
+# ------------------------------------------------------------------- event
+
+def _patch_weights(layer) -> tuple[np.ndarray, np.ndarray]:
+    """Per-layer cache of the conv weights in im2col patch order:
+    ``(kh, kw, cin, cout) -> (cin * kh * kw, cout)`` values + nnz mask,
+    matching :func:`_im2col`'s (cin, kh, kw) feature layout.  Weights are
+    immutable after construction, so the flattening is computed once and
+    stashed on the layer."""
+    cached = layer.__dict__.get("_patch_weights")
+    if cached is None:
+        w = np.transpose(layer.weights, (2, 0, 1, 3))
+        wf = np.ascontiguousarray(w.reshape(-1, layer.weights.shape[3]))
+        cached = (wf, (wf != 0).astype(np.float32))
+        layer.__dict__["_patch_weights"] = cached
+    return cached
+
+
+def _im2col(x4: np.ndarray, kh: int, kw: int, stride: int,
+            oh: int, ow: int) -> np.ndarray:
+    """SAME-padded strided im2col: ``(T, cin, h, w) -> (T * oh * ow,
+    cin * kh * kw)`` patch rows in (cin, kh, kw) feature order.
+
+    Padding follows the XLA "SAME" split (``lo = total // 2``), so the
+    extracted windows are exactly the receptive fields of the dense
+    ``conv_general_dilated`` path.  The window view is zero-copy; the only
+    copy is the final contiguous patch matrix (``T*oh*ow*F`` words — a
+    ``1/cout`` fraction of the conv's MACs)."""
+    T, cin, h, w = x4.shape
+    pad_h = max(0, (oh - 1) * stride + kh - h)
+    pad_w = max(0, (ow - 1) * stride + kw - w)
+    x4 = np.pad(x4, ((0, 0), (0, 0),
+                     (pad_h // 2, pad_h - pad_h // 2),
+                     (pad_w // 2, pad_w - pad_w // 2)))
+    win = np.lib.stride_tricks.sliding_window_view(
+        x4, (kh, kw), axis=(2, 3))[:, :, ::stride, ::stride]
+    # (T, cin, oh, ow, kh, kw) -> (T, oh, ow, cin, kh, kw) -> rows
+    return np.ascontiguousarray(
+        win.transpose(0, 2, 3, 1, 4, 5).reshape(T * oh * ow, cin * kh * kw))
+
+
+class EventCompute(LayerCompute):
+    """Event-driven synaptic forward: skip all work for event-free inputs.
+
+    ``threshold`` defines an event (``|x| > threshold``; 0.0 — the wire
+    semantics of the simulator, where any nonzero message is an event —
+    keeps both kernel modes *exactly* equal to the dense contraction, since
+    skipped inputs contribute exact zeros).  ``bm``/``bk``/``bn`` are the
+    pallas-mode tile sizes; ``mode`` picks the kernel path (see the module
+    docstring).  Instances are stateless across calls and shared via
+    :func:`get_compute`.
+    """
+
+    name = "event"
+
+    def __init__(self, mode: str = "auto", threshold: float = 0.0,
+                 bm: int = 128, bk: int = 128, bn: int = 128,
+                 gather_bm: int = 32):
+        if mode not in ("auto", "pallas", "gather"):
+            raise ValueError(f"unknown event kernel mode {mode!r}")
+        self.mode = mode
+        self.threshold = float(threshold)
+        self.bm, self.bk, self.bn = bm, bk, bn
+        self.gather_bm = int(gather_bm)
+
+    def _kernel_mode(self) -> str:
+        if self.mode != "auto":
+            return self.mode
+        return "gather" if jax.default_backend() == "cpu" else "pallas"
+
+    # ---------------------------------------------------- event contractions
+    def _gather_matmul(self, x: np.ndarray, w: np.ndarray,
+                       bm: int | None = None) -> np.ndarray:
+        """Column-granular event contraction: ``x @ w`` fetching only the
+        weight rows of inputs active within each ``bm``-row tile
+        (``gather_bm`` timesteps by default; conv passes a larger tile
+        since its rows are window positions, not steps).
+
+        For each tile of rows, the union of active columns is compacted
+        (``k_tile`` of them) and one dense ``(bm, k_tile) @ (k_tile, n_out)``
+        GEMM runs on the compacted operands.  Inactive columns contribute
+        exact zeros, so the result equals the dense contraction up to float
+        reassociation.  Weight fetches are ``k_tile * n_out`` words per tile
+        (amortized over ``bm`` rows) and MACs ``bm * k_tile * n_out`` —
+        both proportional to activation density, against the dense path's
+        fixed ``n_in``-wide GEMM.
+        """
+        M, K = x.shape
+        bm = max(1, bm or self.gather_bm)
+        mask = np.abs(x) > self.threshold
+        out = np.zeros((M, w.shape[1]), np.float32)
+        for i0 in range(0, M, bm):
+            i1 = min(i0 + bm, M)
+            cols = np.flatnonzero(mask[i0:i1].any(axis=0))
+            if cols.size == 0:
+                continue                     # event-free tile: no fetch
+            if 2 * cols.size >= K:           # near-dense tile: the compacted
+                out[i0:i1] = x[i0:i1] @ w    # GEMM wouldn't repay the copies
+            else:
+                out[i0:i1] = x[i0:i1, cols] @ w[cols]
+        return out
+
+    def _pair(self, x: np.ndarray, m: np.ndarray, w: np.ndarray,
+              wm: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+        """(pre, macs) through the selected kernel mode."""
+        if self._kernel_mode() == "gather":
+            return (self._gather_matmul(np.asarray(x, np.float32), w),
+                    self._gather_matmul(np.asarray(m, np.float32), wm))
+        y, macs = event_matmul_pair(
+            jnp.asarray(x, jnp.float32), jnp.asarray(m, jnp.float32),
+            jnp.asarray(w), jnp.asarray(wm), threshold=self.threshold,
+            bm=self.bm, bk=self.bk, bn=self.bn)
+        return np.asarray(y), np.asarray(macs)
+
+    # ------------------------------------------------------------ layer kinds
+    def fc_forward(self, layer, x_eff, act_mask, msgs_in):
+        pre, macs = self._pair(x_eff, act_mask, layer.weights, layer.w_mask)
+        fetches = np.broadcast_to(msgs_in[:, None].astype(np.float32),
+                                  macs.shape)
+        return pre, macs, fetches
+
+    def _conv_gather(self, a4: np.ndarray, wf: np.ndarray, layer
+                     ) -> tuple[np.ndarray, np.ndarray]:
+        """Channel-compacted gather-mode conv: input channels with no event
+        anywhere in the time batch are dropped *before* the im2col copy, so
+        both the patch matrix and the weight fetch scale with structured
+        (channel-level) activation density; the per-tile column union then
+        harvests the remaining fine-grained sparsity.  Returns the
+        ``(T * oh * ow, cout)`` result and the per-window event row sums
+        (dropped channels are exact zeros, so both are unchanged)."""
+        kh, kw = layer.weights.shape[:2]
+        cin = a4.shape[1]
+        oh, ow = layer.out_hw
+        active_c = np.abs(a4).max(axis=(0, 2, 3)) > self.threshold
+        k_c = int(active_c.sum())
+        if k_c == 0:
+            T = a4.shape[0]
+            z = np.zeros((T * oh * ow, wf.shape[1]), np.float32)
+            return z, np.zeros(T * oh * ow, np.float32)
+        if 2 * k_c < cin:
+            ch = np.flatnonzero(active_c)
+            a4 = a4[:, ch]
+            wf = np.ascontiguousarray(
+                wf.reshape(cin, kh * kw, -1)[ch].reshape(k_c * kh * kw, -1))
+        pat = _im2col(a4, kh, kw, layer.stride, oh, ow)
+        rows = pat.sum(axis=1, dtype=np.float32)
+        # conv rows are window positions (oh*ow of them per step): tile a
+        # whole timestep's windows together so the per-tile overhead stays
+        # per-step, like the fc path
+        return self._gather_matmul(pat, wf, bm=max(self.gather_bm,
+                                                   oh * ow)), rows
+
+    def conv_forward(self, layer, x_eff, act_mask, msgs_in):
+        """Event-driven conv through the im2col view: each output position's
+        receptive field is one patch row; windows without events fetch no
+        weights.  Counter semantics match the dense conv bit for bit:
+        ``macs`` sums the weight-nnz mask over each window's events and
+        ``fetches_dense`` counts every event in the window once per output
+        channel."""
+        T = x_eff.shape[0]
+        h, w = layer.in_hw
+        cin = layer.weights.shape[2]
+        kh, kw = layer.weights.shape[:2]
+        oh, ow = layer.out_hw
+        cout = layer.weights.shape[3]
+        wf, wfm = _patch_weights(layer)
+        x4 = np.asarray(x_eff, np.float32).reshape(T, cin, h, w)
+        m4 = np.asarray(act_mask, np.float32).reshape(T, cin, h, w)
+        if self._kernel_mode() == "gather":
+            pre, _ = self._conv_gather(x4, wf, layer)
+            macs, fetch_rows = self._conv_gather(m4, wfm, layer)
+        else:
+            xpat = _im2col(x4, kh, kw, layer.stride, oh, ow)
+            mpat = _im2col(m4, kh, kw, layer.stride, oh, ow)
+            pre, macs = self._pair(xpat, mpat, wf, wfm)
+            fetch_rows = mpat.sum(axis=1, dtype=np.float32)
+        fetches = np.broadcast_to(fetch_rows[:, None], (T * oh * ow, cout))
+        # (T*oh*ow, cout) -> channel-major (T, cout * oh * ow) flat maps
+        to_flat = lambda a: np.transpose(
+            a.reshape(T, oh, ow, cout), (0, 3, 1, 2)).reshape(T, -1)
+        return to_flat(pre), to_flat(macs), to_flat(fetches)
+
+
+# ---------------------------------------------------------------- registry
+
+_REGISTRY: dict[str, type[LayerCompute]] = {
+    "dense": DenseCompute,
+    "event": EventCompute,
+}
+_INSTANCES: dict[str, LayerCompute] = {}
+
+
+def register_compute(name: str, factory: type[LayerCompute]) -> None:
+    """Register a backend class under ``name`` (overwrites; the instance
+    cache is invalidated so the next :func:`get_compute` rebuilds)."""
+    _REGISTRY[name] = factory
+    _INSTANCES.pop(name, None)
+
+
+def get_compute(spec: "str | LayerCompute | None" = None) -> LayerCompute:
+    """Resolve a ``compute=`` argument: None -> :data:`DEFAULT_COMPUTE`,
+    a registered name -> its (shared) instance, an instance -> itself."""
+    if spec is None:
+        spec = DEFAULT_COMPUTE
+    if isinstance(spec, LayerCompute):
+        return spec
+    if spec not in _REGISTRY:
+        raise ValueError(f"unknown compute backend {spec!r}; registered: "
+                         f"{sorted(_REGISTRY)}")
+    if spec not in _INSTANCES:
+        _INSTANCES[spec] = _REGISTRY[spec]()
+    return _INSTANCES[spec]

@@ -22,6 +22,17 @@ Two execution engines produce identical event counts:
   the whole ``(T, n)`` pre-activation block.  Sigma-delta input
   reconstruction is a cumulative sum over the time axis.
 
+The per-layer synaptic forward itself (the pre-activation GEMM / conv plus
+the exact MAC / fetch counter maps) is pluggable: both engines delegate it
+to a :class:`repro.neuromorphic.compute.LayerCompute` backend (``compute=``
+on :meth:`SimLayer.step` / :meth:`SimLayer.step_batch` /
+:meth:`SimNetwork.run` / :meth:`SimNetwork.run_batch`).  ``"dense"`` — the
+original jnp GEMM / ``conv_general_dilated`` math, bit-exact — is the
+default; ``"event"`` routes the forward through the event-driven Pallas
+kernel path, where work scales with activation density.  Neuron-state
+recurrences and message gating stay here: they are the neuron model, not
+the synaptic compute.
+
 The cost model in :mod:`repro.neuromorphic.timestep` turns the exact counter
 maps of either engine into per-core times and energies.
 """
@@ -32,9 +43,10 @@ import dataclasses
 import functools
 from typing import Any
 
-import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.neuromorphic import compute as _compute
 
 
 @dataclasses.dataclass
@@ -162,15 +174,19 @@ class SimLayer:
 
     # ------------------------------------------------------------------ step
     def step(self, x_in: np.ndarray, state: dict[str, np.ndarray],
-             in_acc: np.ndarray | None) -> tuple[np.ndarray, dict, CounterMaps,
-                                                 np.ndarray | None]:
+             in_acc: np.ndarray | None, *,
+             compute=None) -> tuple[np.ndarray, dict, CounterMaps,
+                                    np.ndarray | None]:
         """One timestep: consume input messages ``x_in``, produce output
         messages, update neuron state, and count events exactly.
 
         ``in_acc`` reconstructs the upstream activation when the upstream
         layer sends deltas (sigma-delta); otherwise it is None and the raw
-        messages are the activation.
+        messages are the activation.  ``compute`` selects the synaptic
+        backend (:func:`repro.neuromorphic.compute.get_compute`); the
+        forward runs through the backend's batched contract at T = 1.
         """
+        cc = _compute.get_compute(compute)
         x_in = np.asarray(x_in, np.float32)
         if in_acc is not None:
             in_acc = in_acc + x_in          # delta reconstruction
@@ -181,12 +197,11 @@ class SimLayer:
         act_mask = (x_in != 0).astype(np.float32)   # events on the wire
         msgs_in = float(act_mask.sum())
 
-        if self.kind == "fc":
-            pre = x_eff @ self.weights
-            macs = act_mask @ self.w_mask
-            fetches_dense = np.full(self.n_neurons, msgs_in, np.float32)
-        else:
-            pre, macs, fetches_dense = self._conv_forward(x_eff, act_mask)
+        pre, macs, fetches_dense = cc.forward(
+            self, x_eff[None, :], act_mask[None, :],
+            np.asarray([msgs_in], np.float32))
+        pre = pre[0]
+        macs, fetches_dense = macs[0], fetches_dense[0]
 
         if self.bias is not None:
             pre = pre + self.bias
@@ -207,23 +222,25 @@ class SimLayer:
 
     # ------------------------------------------------------- batched step
     def step_batch(self, x_in: np.ndarray, state: dict[str, np.ndarray],
-                   in_acc: np.ndarray | None
-                   ) -> tuple[np.ndarray, dict, BatchCounters,
-                              np.ndarray | None]:
+                   in_acc: np.ndarray | None, *,
+                   compute=None) -> tuple[np.ndarray, dict, BatchCounters,
+                                          np.ndarray | None]:
         """All T timesteps at once: consume the full ``(T, n_in)`` message
         matrix, produce ``(T, n)`` output messages, and count events exactly.
 
         Equivalent to T calls of :meth:`step`: the input-side delta
         reconstruction is a cumulative sum over time, the synaptic forward is
-        one GEMM / one batched conv, and neuron state advances in a
-        vectorized recurrence over T.  Counters and neuron recurrences use
-        the same float op order as the step-major path (bit-identical); the
-        delta accumulator matches bit for bit when it starts at zero, which
-        :meth:`SimNetwork.init_accs` guarantees for every run — a caller
-        chaining ``step_batch`` from a *nonzero* accumulator gets
-        ``acc + cumsum(x)``, equal to the step-major chain only to within
-        float32 rounding.
+        one GEMM / one batched conv (through the selected
+        :class:`~repro.neuromorphic.compute.LayerCompute` backend), and
+        neuron state advances in a vectorized recurrence over T.  Counters
+        and neuron recurrences use the same float op order as the
+        step-major path (bit-identical); the delta accumulator matches bit
+        for bit when it starts at zero, which :meth:`SimNetwork.init_accs`
+        guarantees for every run — a caller chaining ``step_batch`` from a
+        *nonzero* accumulator gets ``acc + cumsum(x)``, equal to the
+        step-major chain only to within float32 rounding.
         """
+        cc = _compute.get_compute(compute)
         x_in = np.asarray(x_in, np.float32)
         if x_in.ndim != 2:
             raise ValueError(f"step_batch needs (T, n_in), got {x_in.shape}")
@@ -244,14 +261,7 @@ class SimLayer:
         act_mask = (x_in != 0).astype(np.float32)   # events on the wire
         msgs_in = act_mask.sum(axis=1)              # (T,)
 
-        if self.kind == "fc":
-            pre = x_eff @ self.weights
-            macs = act_mask @ self.w_mask
-            fetches_dense = np.broadcast_to(
-                msgs_in[:, None].astype(np.float32), macs.shape)
-        else:
-            pre, macs, fetches_dense = self._conv_forward_batch(x_eff,
-                                                                act_mask)
+        pre, macs, fetches_dense = cc.forward(self, x_eff, act_mask, msgs_in)
 
         if self.bias is not None:
             pre = pre + self.bias
@@ -344,57 +354,6 @@ class SimLayer:
             return y, dict(state, x=x)
         raise ValueError(f"unknown neuron model {self.neuron_model}")
 
-    # ------------------------------------------------------------- conv math
-    def _conv_forward(self, x_eff: np.ndarray, act_mask: np.ndarray):
-        """SAME-padded strided conv + exact MAC / dense-fetch counting.
-
-        Counter maps are returned channel-major ((cout, oh, ow) flattened) so
-        output-channel core ranges are contiguous.
-        """
-        h, w = self.in_hw
-        cin = self.weights.shape[2]
-        # flat boundaries are channel-major ((c, h, w)) on BOTH sides so
-        # conv->conv stacks keep consistent receptive fields
-        to_hwc = lambda a: np.transpose(a.reshape(cin, h, w), (1, 2, 0))
-        x4 = jnp.asarray(to_hwc(x_eff)[None])
-        m4 = jnp.asarray(to_hwc(act_mask)[None])
-        wj, wmask, wones = self._conv_kernels
-
-        conv = self._conv_op
-        pre = np.asarray(conv(x4, wj))[0]                  # (oh, ow, cout)
-        macs = np.asarray(conv(m4, wmask))[0]
-        fetches = np.asarray(conv(m4, wones))[0]
-        # channel-major flatten for contiguous channel partitions
-        to_flat = lambda a: np.transpose(a, (2, 0, 1)).reshape(-1)
-        pre_flat = to_flat(pre)
-        return pre_flat, to_flat(macs), to_flat(fetches)
-
-    def _conv_op(self, lhs, rhs):
-        return jax.lax.conv_general_dilated(
-            lhs, rhs, window_strides=(self.stride, self.stride),
-            padding="SAME", dimension_numbers=("NHWC", "HWIO", "NHWC"))
-
-    def _conv_forward_batch(self, x_eff: np.ndarray, act_mask: np.ndarray):
-        """All-timesteps conv: one ``conv_general_dilated`` with batch = T
-        per (values, mask, ones) kernel instead of T host->device round
-        trips.  Returns (T, n_neurons) channel-major maps."""
-        T = x_eff.shape[0]
-        h, w = self.in_hw
-        cin = self.weights.shape[2]
-        to_nhwc = lambda a: np.transpose(a.reshape(T, cin, h, w),
-                                         (0, 2, 3, 1))
-        x4 = jnp.asarray(to_nhwc(x_eff))
-        m4 = jnp.asarray(to_nhwc(act_mask))
-        wj, wmask, wones = self._conv_kernels
-
-        conv = self._conv_op
-        pre = np.asarray(conv(x4, wj))                     # (T, oh, ow, cout)
-        macs = np.asarray(conv(m4, wmask))
-        fetches = np.asarray(conv(m4, wones))
-        to_flat = lambda a: np.transpose(a, (0, 3, 1, 2)).reshape(T, -1)
-        return to_flat(pre), to_flat(macs), to_flat(fetches)
-
-
 @dataclasses.dataclass
 class SimNetwork:
     """Feed-forward stack of SimLayers with per-layer state threading."""
@@ -418,41 +377,48 @@ class SimNetwork:
         return accs
 
     def step(self, x: np.ndarray, states: list[dict],
-             accs: list[np.ndarray | None]) -> tuple[np.ndarray, list, list,
-                                                     list[CounterMaps]]:
+             accs: list[np.ndarray | None], *,
+             compute=None) -> tuple[np.ndarray, list, list,
+                                    list[CounterMaps]]:
+        cc = _compute.get_compute(compute)
         counters: list[CounterMaps] = []
         new_states, new_accs = [], []
         cur = np.asarray(x, np.float32)
         for layer, st, acc in zip(self.layers, states, accs):
-            cur, st, cnt, acc = layer.step(cur, st, acc)
+            cur, st, cnt, acc = layer.step(cur, st, acc, compute=cc)
             counters.append(cnt)
             new_states.append(st)
             new_accs.append(acc)
         return cur, new_states, new_accs, counters
 
-    def run(self, xs: np.ndarray) -> tuple[np.ndarray, list[list[CounterMaps]]]:
+    def run(self, xs: np.ndarray, *,
+            compute=None) -> tuple[np.ndarray, list[list[CounterMaps]]]:
         """Step-major reference run: (T, in_size) inputs -> (T, out) outputs
         and per-timestep per-layer counters."""
+        cc = _compute.get_compute(compute)
         states, accs = self.init_states(), self.init_accs()
         outs, all_counters = [], []
         for t in range(xs.shape[0]):
-            y, states, accs, counters = self.step(xs[t], states, accs)
+            y, states, accs, counters = self.step(xs[t], states, accs,
+                                                  compute=cc)
             outs.append(np.asarray(y).reshape(-1))
             all_counters.append(counters)
         return np.stack(outs), all_counters
 
-    def run_batch(self, xs: np.ndarray) -> tuple[np.ndarray,
-                                                 list[BatchCounters]]:
+    def run_batch(self, xs: np.ndarray, *,
+                  compute=None) -> tuple[np.ndarray, list[BatchCounters]]:
         """Layer-major run: (T, in_size) inputs -> (T, out) outputs and one
         :class:`BatchCounters` per layer.  Exactly equivalent to :meth:`run`
         (see the module docstring) but visits each layer once with the full
-        time batch instead of T times."""
+        time batch instead of T times.  ``compute`` selects the synaptic
+        backend for every layer (resolved once per run)."""
+        cc = _compute.get_compute(compute)
         states, accs = self.init_states(), self.init_accs()
         cur = np.asarray(xs, np.float32)
         all_counters: list[BatchCounters] = []
         for i, layer in enumerate(self.layers):
             cur, states[i], cnt, accs[i] = layer.step_batch(
-                cur, states[i], accs[i])
+                cur, states[i], accs[i], compute=cc)
             all_counters.append(cnt)
         T = xs.shape[0]
         return np.asarray(cur).reshape(T, -1), all_counters

@@ -28,6 +28,13 @@ Two engines price a workload:
   engine's outputs and counters can be checked for exact parity
   (``tests/test_sim_equivalence.py``).
 
+Orthogonal to the engine choice, ``compute=`` selects the per-layer
+synaptic backend of the functional run (``"dense"`` GEMM/conv reference or
+the event-driven ``"event"`` kernel path —
+:mod:`repro.neuromorphic.compute`).  Counters are exact across backends,
+so every pricing product (reports, caches, populations) is
+backend-agnostic (``tests/test_compute_backends.py``).
+
 The batched engine is split into two phases so optimization loops can share
 work across many candidates:
 
@@ -207,24 +214,33 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
              part: Partition | None = None,
              mapping: Mapping | None = None, *,
              engine: str | None = None,
+             compute=None,
              precomputed: tuple | None = None) -> SimReport:
     """Run the network on the simulated chip and price every timestep.
 
     Args:
       engine: "batched" (layer-major, default) or "reference" (step-major).
+      compute: per-layer synaptic backend — ``"dense"`` (default) or
+        ``"event"``, a :class:`~repro.neuromorphic.compute.LayerCompute`
+        instance, or None for
+        :data:`repro.neuromorphic.compute.DEFAULT_COMPUTE`.  Both engines
+        honor it; counters (and therefore the priced report) are exact
+        across backends, outputs agree to float roundoff.
       precomputed: a cached ``net.run_batch(xs)`` result to reuse — the
         functional run is independent of partition/mapping/profile, so
         optimization loops that re-price many partitions of the same
         (net, xs) pair should compute it once.  Batched engine only: the
         reference engine ignores it and re-runs the network step-major.
+        Takes precedence over ``compute`` (the run is already done).
     """
     engine = engine or DEFAULT_ENGINE
     part = part or minimal_partition(net, profile)
     mapping = mapping or ordered_mapping(part, profile)
     if engine == "batched":
-        return _simulate_batched(net, xs, profile, part, mapping, precomputed)
+        return _simulate_batched(net, xs, profile, part, mapping, precomputed,
+                                 compute)
     if engine == "reference":
-        return _simulate_reference(net, xs, profile, part, mapping)
+        return _simulate_reference(net, xs, profile, part, mapping, compute)
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -310,11 +326,14 @@ def _neuron_csum(per_neuron: np.ndarray) -> np.ndarray:
 
 
 def precompute_pricing(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
-                       *, precomputed: tuple | None = None) -> PricingCache:
+                       *, precomputed: tuple | None = None,
+                       compute=None) -> PricingCache:
     """Run the functional network (or reuse a cached ``net.run_batch(xs)``
     result) and reduce its counter maps to per-layer cumsums.  One cache
-    prices any number of (partition, mapping) candidates."""
-    outputs, all_counters = precomputed or net.run_batch(xs)
+    prices any number of (partition, mapping) candidates.  ``compute``
+    selects the synaptic backend of the functional run (counters — and so
+    the cache — are exact across backends)."""
+    outputs, all_counters = precomputed or net.run_batch(xs, compute=compute)
     layers = []
     for l, counters in enumerate(all_counters):
         acts_map = (counters.acts_evented if not profile.synchronous
@@ -376,7 +395,8 @@ def _cached_layer_counters(lp: LayerPricing, part: Partition, layer_idx: int,
 def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                         candidates, *, precomputed: tuple | None = None,
                         cache: PricingCache | None = None,
-                        backend: str = "numpy") -> list[SimReport]:
+                        backend: str = "numpy",
+                        compute=None) -> list[SimReport]:
     """Price many (partition, mapping) candidates from ONE functional run.
 
     ``candidates`` is an iterable of ``(Partition, Mapping)`` pairs.  The
@@ -413,7 +433,8 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
     if not cands:
         return []
     cache = cache or precompute_pricing(net, xs, profile,
-                                        precomputed=precomputed)
+                                        precomputed=precomputed,
+                                        compute=compute)
     if backend == "vmap":
         return price_population_vmap(net, profile, cache, cands)
     if backend == "device":
@@ -442,9 +463,10 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
 
 def _simulate_batched(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                       part: Partition, mapping: Mapping,
-                      precomputed: tuple | None) -> SimReport:
+                      precomputed: tuple | None, compute=None) -> SimReport:
     """Layer-major engine: one pricing-cache build + one candidate pricing."""
-    cache = precompute_pricing(net, xs, profile, precomputed=precomputed)
+    cache = precompute_pricing(net, xs, profile, precomputed=precomputed,
+                               compute=compute)
     return price_candidate(net, profile, cache, part, mapping)
 
 
@@ -1016,9 +1038,9 @@ def price_population_device(net: SimNetwork, profile: ChipProfile,
 
 def _simulate_reference(net: SimNetwork, xs: np.ndarray,
                         profile: ChipProfile, part: Partition,
-                        mapping: Mapping) -> SimReport:
+                        mapping: Mapping, compute=None) -> SimReport:
     """Step-major reference engine (original implementation)."""
-    outputs, all_counters = net.run(xs)
+    outputs, all_counters = net.run(xs, compute=compute)
 
     T = xs.shape[0]
     n_layers = len(net.layers)

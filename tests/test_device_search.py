@@ -201,6 +201,40 @@ class TestDecisionParity:
                                               jnp.asarray(e)))
         assert list(r) == [0, 0, 2, 1]
 
+    @given(seed=st.integers(0, 300), cap=st.integers(1, 24))
+    @settings(max_examples=50, deadline=None)
+    def test_pareto_ranks_tie_and_cap_parity(self, seed, cap):
+        """Host and device ranks agree bit for bit on duplicate (time,
+        energy) rows, and on everything below the survivor cutoff after
+        rank-capped peeling (unpeeled rows carry the sentinel rank K on
+        both sides)."""
+        rng = np.random.default_rng(seed)
+        k = int(rng.integers(2, 24))
+        # tiny integer grid -> many exact duplicates and dominance ties
+        t = rng.integers(0, 4, k).astype(np.float64)
+        e = rng.integers(0, 4, k).astype(np.float64)
+        full_h = pareto_ranks(t, e)
+        cap_h = pareto_ranks(t, e, n_keep=cap)
+        with enable_x64():
+            full_d = np.asarray(pareto_ranks_array(jnp.asarray(t),
+                                                   jnp.asarray(e)))
+            cap_d = np.asarray(pareto_ranks_array(jnp.asarray(t),
+                                                  jnp.asarray(e),
+                                                  n_keep=cap))
+        assert np.array_equal(full_h, full_d)
+        assert np.array_equal(cap_h, cap_d)
+        # duplicate rows always share a rank
+        for i in range(k):
+            same = (t == t[i]) & (e == e[i])
+            assert (full_h[same] == full_h[i]).all()
+            assert (cap_h[same] == cap_h[i]).all()
+        # capped == full below the cutoff; sentinel only above it
+        peeled = cap_h < k
+        assert int(peeled.sum()) >= min(cap, k)
+        assert np.array_equal(cap_h[peeled], full_h[peeled])
+        if peeled.any() and (~peeled).any():
+            assert full_h[~peeled].min() > full_h[peeled].max()
+
 
 class TestDeviceEngine:
     def test_trajectory_parity_device_vs_numpy_mirror(self, workload):

@@ -1,5 +1,6 @@
 """Pallas kernel validation: shape/dtype sweeps vs the pure-jnp oracles
-(interpret mode executes the kernel bodies on CPU)."""
+(interpret mode executes the kernel bodies on CPU).  The ``quick``-marked
+subset is the CI kernels step's smoke pass."""
 
 import jax
 import jax.numpy as jnp
@@ -8,10 +9,13 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.kernels import block_activity, event_matmul, sigma_delta_encode
+from repro.kernels import (block_activity, event_matmul, event_matmul_pair,
+                           pad_compact, sigma_delta_encode)
 from repro.kernels.event_matmul.ref import (block_activity_ref,
                                             event_matmul_ref, event_stats_ref)
 from repro.kernels.sigma_delta.ref import sigma_delta_ref
+
+quick = pytest.mark.quick
 
 
 def _tol(dtype):
@@ -56,6 +60,7 @@ class TestEventMatmul:
         yr = event_matmul_ref(x, w, threshold=0.0, bm=bm, bk=bk)
         np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
 
+    @quick
     def test_threshold_drops_small_blocks(self):
         rng = np.random.default_rng(5)
         x = jnp.asarray(rng.normal(size=(128, 256)) * 0.01, jnp.float32)
@@ -63,6 +68,7 @@ class TestEventMatmul:
         y = event_matmul(x, w, threshold=1.0)     # everything sub-threshold
         assert float(jnp.abs(y).max()) == 0.0
 
+    @quick
     def test_fully_dense_matches_plain_matmul(self):
         rng = np.random.default_rng(6)
         x = jnp.asarray(rng.normal(size=(256, 384)), jnp.float32)
@@ -70,6 +76,7 @@ class TestEventMatmul:
         y = event_matmul(x, w, threshold=0.0)
         np.testing.assert_allclose(y, x @ w, atol=1e-3, rtol=1e-4)
 
+    @quick
     def test_contraction_mismatch_raises(self):
         with pytest.raises(ValueError):
             event_matmul(jnp.zeros((8, 16)), jnp.zeros((32, 8)))
@@ -84,6 +91,7 @@ class TestEventMatmul:
         yr = event_matmul_ref(x, w, threshold=0.0, bm=128, bk=128)
         np.testing.assert_allclose(y, yr, atol=1e-4, rtol=1e-4)
 
+    @quick
     def test_activity_counters(self):
         rng = np.random.default_rng(9)
         x = make_block_sparse(rng, 256, 512, 0.25, 128, 128, jnp.float32)
@@ -108,6 +116,7 @@ class TestSigmaDelta:
         np.testing.assert_allclose(np.asarray(s2, np.float32),
                                    np.asarray(sr, np.float32), **_tol(dtype))
 
+    @quick
     def test_steady_state_sends_nothing(self):
         a = jnp.ones((16, 256))
         q1, s1 = sigma_delta_encode(a, jnp.zeros_like(a), theta=0.05)
@@ -135,11 +144,53 @@ class TestSigmaDelta:
         np.testing.assert_allclose(nz / theta, np.round(nz / theta),
                                    atol=1e-3)
 
+    @quick
     def test_bad_theta_raises(self):
         with pytest.raises(ValueError):
             sigma_delta_encode(jnp.zeros((4, 4)), jnp.zeros((4, 4)), theta=0.0)
 
 
+class TestSharedPadCompact:
+    @quick
+    def test_pad_compact_single_pad_contract(self):
+        """One pad serves the activity map AND the kernel's index lists."""
+        rng = np.random.default_rng(12)
+        x = make_block_sparse(rng, 130, 200, 0.4, 128, 128, jnp.float32)
+        xp, active, idx, cnt = pad_compact(x, 0.0, 128, 128)
+        assert xp.shape == (256, 256)
+        np.testing.assert_array_equal(np.asarray(active),
+                                      np.asarray(block_activity(x, 0.0)))
+        mb, kb = active.shape
+        assert idx.shape == (mb, kb) and cnt.shape == (mb,)
+        np.testing.assert_array_equal(np.asarray(cnt),
+                                      np.asarray(active).sum(axis=1))
+        # compacted indices enumerate exactly the active tiles, in order
+        act_np = np.asarray(active)
+        for m in range(mb):
+            want = np.flatnonzero(act_np[m])
+            np.testing.assert_array_equal(np.asarray(idx[m, :cnt[m]]), want)
+
+    @quick
+    def test_event_matmul_pair_matches_two_calls(self):
+        """The simulator's batched entry point == two event matmuls."""
+        rng = np.random.default_rng(13)
+        x = make_block_sparse(rng, 64, 192, 0.5, 128, 128, jnp.float32)
+        m = (jnp.abs(x) > 0).astype(jnp.float32)
+        w = jnp.asarray(rng.normal(size=(192, 96)), jnp.float32)
+        wm = (w != 0).astype(jnp.float32)
+        y, macs = event_matmul_pair(x, m, w, wm, threshold=0.0)
+        np.testing.assert_array_equal(y, event_matmul(x, w, threshold=0.0))
+        np.testing.assert_array_equal(macs,
+                                      event_matmul(m, wm, threshold=0.0))
+
+    @quick
+    def test_event_matmul_pair_shape_mismatch_raises(self):
+        with pytest.raises(ValueError):
+            event_matmul_pair(jnp.zeros((8, 16)), jnp.zeros((8, 8)),
+                              jnp.zeros((16, 4)), jnp.zeros((16, 4)))
+
+
+@quick
 def test_kernels_jit_cacheable():
     """Repeated calls hit the jit cache (no retrace explosion)."""
     x = jnp.ones((128, 256))

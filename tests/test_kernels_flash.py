@@ -30,6 +30,19 @@ CASES = [
 ]
 
 
+@pytest.mark.quick
+def test_flash_quick_smoke():
+    """One small case for the CI kernels step (interpret mode executes the
+    kernel body); the full sweep below stays in the tier-1 run."""
+    q, k, v = _rand(jax.random.PRNGKey(1), 1, 128, 128, 2, 2, 64,
+                    jnp.float32)
+    got = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=2e-5, rtol=2e-5)
+
+
 @pytest.mark.parametrize("B,Sq,Skv,H,K,hd,window,softcap,dtype", CASES)
 def test_flash_matches_ref(B, Sq, Skv, H, K, hd, window, softcap, dtype):
     q, k, v = _rand(jax.random.PRNGKey(0), B, Sq, Skv, H, K, hd, dtype)

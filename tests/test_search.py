@@ -272,6 +272,36 @@ class TestSearch:
                     assert not (ts[i] <= ts[j] and es[i] <= es[j]
                                 and (ts[i] < ts[j] or es[i] < es[j]))
 
+    @quick
+    def test_eps_archive_batch_update_equals_sequential(self):
+        """update_batch must be exactly the sequential add() fold — same
+        members, same order, same admission count."""
+        from hypothesis import given, settings
+        from hypothesis import strategies as st
+
+        @given(seed=st.integers(0, 300), eps=st.sampled_from([0.0, 0.02, 0.2]))
+        @settings(max_examples=40, deadline=None)
+        def check(seed, eps):
+            rng = np.random.default_rng(seed)
+            K = int(rng.integers(1, 40))
+            # small integer grid -> frequent duplicates and eps-near ties
+            t = rng.integers(1, 8, K).astype(float)
+            e = rng.integers(1, 8, K).astype(float)
+            cores = rng.integers(1, 4, (K, 2)).astype(np.int32)
+            perm = np.tile(np.arange(6, dtype=np.int32), (K, 1))
+            seq, bat = EpsParetoArchive(eps), EpsParetoArchive(eps)
+            added_seq = sum(seq.add(t[k], e[k], cores[k], perm[k], None)
+                            for k in range(K))
+            added_bat = bat.update_batch(t, e, cores, perm)
+            assert added_bat == added_seq
+            a = [(it["time"], it["energy"], it["cores"].tobytes())
+                 for it in seq._items]
+            b = [(it["time"], it["energy"], it["cores"].tobytes())
+                 for it in bat._items]
+            assert a == b
+
+        check()
+
     def test_search_returns_front_with_knee(self):
         net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
         prof = loihi2_like()
