@@ -132,7 +132,8 @@ def _generation_throughput(net, xs, prof, *, pop: int, gens: int,
 
 
 def _head_to_head(net, xs, prof, *, population_size: int, generations: int,
-                  seed: int = 0) -> dict:
+                  seed: int = 0, checkpoint_dir: str | None = None,
+                  resume: bool = False) -> dict:
     # one pricing cache for every arm; each arm gets its own eval counter
     shared = SimEvaluator(net, xs, prof)
 
@@ -153,7 +154,8 @@ def _head_to_head(net, xs, prof, *, population_size: int, generations: int,
     evo = evolutionary_search(
         net, prof, ev_e, population_size=population_size,
         generations=generations, seed=seed, greedy=greedy,
-        max_evaluations=budget - ev_g.n_evals)
+        max_evaluations=budget - ev_g.n_evals,
+        checkpoint_dir=checkpoint_dir, resume=resume)
     t_evo = time.perf_counter() - t0
 
     # cold start (no greedy seeds), full budget, for reference
@@ -191,7 +193,13 @@ def _head_to_head(net, xs, prof, *, population_size: int, generations: int,
     }
 
 
-def run(quick: bool = False) -> dict:
+def run(quick: bool = False, *, checkpoint_dir: str | None = None,
+        resume: bool = False) -> dict:
+    """``checkpoint_dir`` makes the evolutionary arm of each head-to-head
+    crash-safe: per-generation snapshots land under
+    ``<checkpoint_dir>/<workload>/`` and ``resume=True`` continues a killed
+    run from its newest snapshot (bit-identical to the uninterrupted run —
+    see docs/robustness.md)."""
     smoke = os.environ.get("REPRO_BENCH_SMOKE") == "1"
     steps = 2 if smoke else (3 if quick else 6)
     pop = 8 if smoke else (12 if quick else 24)
@@ -205,11 +213,17 @@ def run(quick: bool = False) -> dict:
     gen_gens = 2 if smoke else 3
     device_pops = () if smoke else (1024,)
 
+    def ckpt_for(workload: str) -> str | None:
+        if checkpoint_dir is None:
+            return None
+        return os.path.join(checkpoint_dir, workload)
+
     out = {}
     s5, prof = W.s5_sim(weight_density=0.5, seed=0, weight_format="sparse")
     xs = W.sim_inputs(s5, 0.3, steps, seed=2)
     out["s5"] = _head_to_head(s5, xs, prof, population_size=pop,
-                              generations=gens, seed=0)
+                              generations=gens, seed=0,
+                              checkpoint_dir=ckpt_for("s5"), resume=resume)
     out["s5"]["pricing"] = _pricing_throughput(s5, xs, prof, pop=64,
                                                repeats=price_reps)
     out["s5"]["generation"] = _generation_throughput(s5, xs, prof,
@@ -220,7 +234,9 @@ def run(quick: bool = False) -> dict:
     pnet, pprof = W.pilotnet_sim(weight_density=0.6, seed=1)
     pxs = W.sim_inputs(pnet, 0.3, max(steps - 1, 2), seed=3)
     out["pilotnet"] = _head_to_head(pnet, pxs, pprof, population_size=pop,
-                                    generations=gens, seed=0)
+                                    generations=gens, seed=0,
+                                    checkpoint_dir=ckpt_for("pilotnet"),
+                                    resume=resume)
     out["pilotnet"]["pricing"] = _pricing_throughput(pnet, pxs, pprof,
                                                      pop=64,
                                                      repeats=price_reps)
@@ -282,3 +298,30 @@ def report(res: dict) -> str:
                         f"evals/s)")
     lines.append(f"  wrote {BENCH_PATH}")
     return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser(
+        description="greedy vs evolutionary mapping-search head-to-head")
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="extra-small sizes for CI (implies --quick)")
+    ap.add_argument("--checkpoint-dir", default=None,
+                    help="snapshot the evolutionary arms per generation "
+                         "under <dir>/<workload>/ (crash-safe)")
+    ap.add_argument("--resume", action="store_true",
+                    help="continue each evolutionary arm from its newest "
+                         "snapshot in --checkpoint-dir")
+    args = ap.parse_args(argv)
+    if args.resume and not args.checkpoint_dir:
+        ap.error("--resume requires --checkpoint-dir")
+    os.environ["REPRO_BENCH_SMOKE"] = "1" if args.smoke else "0"
+    res = run(quick=args.quick or args.smoke,
+              checkpoint_dir=args.checkpoint_dir, resume=args.resume)
+    print(report(res))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

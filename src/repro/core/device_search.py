@@ -53,18 +53,28 @@ reference for its own path, not for this one):
 
 from __future__ import annotations
 
+import dataclasses
+import logging
+import time
+
 import numpy as np
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
 
+from repro.core.resilience import (Demotion, FaultPlan, RetryPolicy,
+                                   SearchCheckpointer, finite_mean,
+                                   quarantine_rows)
 from repro.core.search import (Candidate, EpsParetoArchive, GenStats,
-                               MoveTables, Population, SearchResult, decode,
-                               move_tables, pareto_ranks, seeded_population)
+                               MoveTables, Population, SearchResult,
+                               _validate_search_args, decode, move_tables,
+                               pareto_ranks, seeded_population)
 from repro.neuromorphic.timestep import (device_pricer, precompute_pricing,
                                          price_candidate,
                                          simulate_population)
+
+log = logging.getLogger("repro.resilience")
 
 #: bottleneck-stage ids, in the (first-max-wins) vote order shared with
 #: ``SimReport.bottleneck_stage`` / ``_VmapPricer`` votes
@@ -260,8 +270,15 @@ def survival_order_array(xp, cores, perm, times, energies, ranks,
 def _sorted_state(xp, rank_fn, cores, perm, out, idx_n):
     """Price-output dict + genome rows -> survival-sorted state dict.
     Ranking is capped at the survivor count ``idx_n`` — rows beyond the
-    cutoff only need a rank larger than every kept one."""
-    t, e = out["times"], out["energies"]
+    cutoff only need a rank larger than every kept one.
+
+    Objectives are quarantined first: NaN/inf rows take the sentinel
+    ``(+inf, +inf)`` fitness, so they are dominated by every finite row
+    and sort last, instead of poisoning the nondomination ranks (NaN
+    comparisons are all False — an unscreened NaN row is never dominated
+    and would rank 0).  Finite rows pass through bit-unchanged, on both
+    the jitted and the mirror path (same ``where`` masking)."""
+    t, e, _ = quarantine_rows(xp, out["times"], out["energies"])
     ranks = rank_fn(t, e, n_keep=idx_n)
     idx = survival_order_array(xp, cores, perm, t, e, ranks, idx_n)
     return dict(cores=cores[idx], perm=perm[idx], times=t[idx],
@@ -288,8 +305,11 @@ def _generation_step(xp, price_fn, rank_fn, feasible, n_phys, explore_prob,
                         state["cores"].shape[0])
     off = dict(cores=oc, perm=op, times=out["times"],
                energies=out["energies"])
+    n_quar = (~(xp.isfinite(out["times"])
+                & xp.isfinite(out["energies"]))).sum()
     stats = dict(best_time=new["times"][0], best_energy=new["energies"][0],
-                 mean_time=new["times"].mean())
+                 mean_time=finite_mean(xp, new["times"]),
+                 n_quarantined=n_quar)
     return new, off, stats
 
 
@@ -383,7 +403,7 @@ class _NumpyMirror:
     """
 
     def __init__(self, net, xs, profile, cache, tables, *, explore_prob,
-                 tournament_k):
+                 tournament_k, fault_plan: FaultPlan | None = None):
         self.net, self.xs, self.profile, self.cache = net, xs, profile, cache
         self.feasible = np.asarray(tables.feasible)
         self.n_phys = int(tables.n_cores_phys)
@@ -391,6 +411,10 @@ class _NumpyMirror:
         self.n_slots = int(profile.n_cores)
         self.explore_prob = float(explore_prob)
         self.tournament_k = int(tournament_k)
+        #: fault-injection hook: scripted NaN pricing rows land here (the
+        #: jitted engine's pricing cannot be corrupted per-call without a
+        #: recompile, so the harness exercises quarantine via the mirror)
+        self.fault_plan = fault_plan
 
     def _price(self, cores, perm):
         pairs = Population(cores, perm).pairs()
@@ -398,6 +422,8 @@ class _NumpyMirror:
                                       pairs, cache=self.cache)
         t = np.asarray([r.time_per_step for r in reports])
         e = np.asarray([r.energy_per_step for r in reports])
+        if self.fault_plan is not None:
+            t, e = self.fault_plan.corrupt_arrays(t, e)
         stage = np.asarray([STAGE_ID[r.bottleneck_stage] for r in reports],
                            np.int32)
         hot_mem = np.empty(len(reports), np.int32)
@@ -426,7 +452,72 @@ class _NumpyMirror:
                                 self.explore_prob, state, draws)
 
 
+# ------------------------------------------------------ degradation shell
+
+class _ResilientEngine:
+    """Graceful-degradation shell around the jitted generation engine.
+
+    A failed ``init``/``step`` (compile error, device OOM, runtime fault —
+    or an injected one at the ``"device"`` site of a :class:`FaultPlan`)
+    is retried per the :class:`RetryPolicy`; when the retries are
+    exhausted the engine demotes **permanently** to the host NumPy mirror
+    (a failed compile fails again — flapping back is pointless).  The
+    mirror consumes the identical :func:`generation_draws` under the same
+    ``fold_in(key, gen)`` contract, so a mid-run demotion continues the
+    same trajectory to float64 roundoff; a mirror failure propagates."""
+
+    def __init__(self, primary: DeviceSearchEngine, mirror_factory, *,
+                 retry: RetryPolicy | None = None,
+                 fault_plan: FaultPlan | None = None):
+        self.engine = primary
+        self._mirror_factory = mirror_factory
+        self.retry = retry or RetryPolicy()
+        self.fault_plan = fault_plan
+        self.backend = "device"
+        self.demotions: list[Demotion] = []
+
+    def _run(self, call, site: str):
+        while True:
+            delay = self.retry.backoff_s
+            last = None
+            for a in range(self.retry.max_retries + 1):
+                if a and delay > 0:
+                    time.sleep(delay)
+                    delay *= self.retry.multiplier
+                try:
+                    if self.fault_plan is not None:
+                        self.fault_plan.check(self.backend)
+                    return call(self.engine)
+                except Exception as e:          # SimulatedCrash passes:
+                    last = e                    # it is a BaseException
+            if self.backend != "device":
+                raise last                      # mirror failed: no net left
+            d = Demotion(site=site, frm="device", to="numpy-mirror",
+                         error=repr(last), retries=self.retry.max_retries)
+            self.demotions.append(d)
+            log.warning("device search engine failed %s after %d retries "
+                        "(%s); demoting to the host numpy mirror",
+                        site, d.retries, d.error)
+            self.engine = self._mirror_factory()
+            self.backend = "numpy-mirror"
+
+    def init(self, cores, perm):
+        return self._run(lambda e: e.init(cores, perm), "init")
+
+    def step(self, state, key, n_off: int):
+        def call(e):
+            st = jax.device_get(state) if isinstance(e, _NumpyMirror) \
+                else state
+            return e.step(st, key, n_off)
+        return self._run(call, "step")
+
+
 # ----------------------------------------------------------------- driver
+
+#: the engine's device-resident state dict, in checkpoint order
+_STATE_KEYS = ("cores", "perm", "times", "energies", "stage", "hot_mem",
+               "hot_act")
+
 
 def evolutionary_search_device(
     net,
@@ -443,6 +534,12 @@ def evolutionary_search_device(
     greedy=None,
     pareto_eps: float = 0.01,
     reference: bool = False,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 3,
+    resume: bool = False,
+    fault_plan: FaultPlan | None = None,
+    retry: RetryPolicy | None = None,
 ) -> SearchResult:
     """Run the device-resident (mu + lambda) search (the ``engine="device"``
     path of :func:`repro.core.search.evolutionary_search`).
@@ -459,6 +556,18 @@ def evolutionary_search_device(
     evaluations.  ``reference=True`` swaps the jitted step for the host
     NumPy mirror (the parity harness; same PRNG-key contract, same
     trajectory to float64 roundoff).
+
+    Fault tolerance (``docs/robustness.md``): ``checkpoint_dir`` /
+    ``checkpoint_every`` / ``checkpoint_keep`` / ``resume`` snapshot and
+    restore the engine's device state dict — resume is bit-identical
+    because each generation is a pure function of ``(key, gen,
+    survivors)`` under the PRNG-key contract.  A failed jitted
+    ``init``/``step`` is retried per ``retry`` and then demoted
+    permanently to the host mirror (logged; recorded in
+    ``SearchResult.demotions``).  ``fault_plan`` scripts deterministic
+    faults: ``fail={"device": n}`` makes the next ``n`` jitted calls
+    raise, ``nan_rows`` corrupts mirror pricing rows, ``kill_after_gen``
+    simulates a crash after that generation's checkpoint.
     """
     for attr in ("net", "xs", "profile"):
         if not hasattr(evaluator, attr):
@@ -466,50 +575,103 @@ def evolutionary_search_device(
                 "engine='device' needs a SimEvaluator-like evaluator "
                 f"(missing .{attr}); plain callables can only drive the "
                 "numpy engine")
+    _validate_search_args(net, profile, population_size=population_size,
+                          generations=generations,
+                          seed_candidates=seed_candidates)
     xs = evaluator.xs
     cache = getattr(evaluator, "cache", None) \
         or precompute_pricing(net, xs, profile)
 
-    rng = np.random.default_rng(seed)
+    ckpt = (SearchCheckpointer(checkpoint_dir, every=checkpoint_every,
+                               keep=checkpoint_keep)
+            if checkpoint_dir else None)
+    restored = ckpt.restore() if (ckpt is not None and resume) else None
+
     tables = move_tables(net, profile)
-    cands = list(seed_candidates if seed_candidates is not None else
-                 seeded_population(net, profile, size=population_size,
-                                   rng=rng, greedy=greedy))
-    if not cands:
-        raise ValueError("empty initial population")
-    if max_evaluations is not None:
-        cands = cands[:max(1, max_evaluations)]
-    pop = Population.from_candidates(cands)
+    n_layers = len(cache.layers)
+    n_slots = int(profile.n_cores)
+
+    def _mirror():
+        return _NumpyMirror(net, xs, profile, cache, tables,
+                            explore_prob=explore_prob,
+                            tournament_k=tournament_k,
+                            fault_plan=fault_plan)
 
     if reference:
-        engine = _NumpyMirror(net, xs, profile, cache, tables,
-                              explore_prob=explore_prob,
-                              tournament_k=tournament_k)
+        engine = _mirror()
     else:
-        engine = _engine_for(net, profile, cache, tables,
-                             explore_prob=explore_prob,
-                             tournament_k=tournament_k)
+        engine = _ResilientEngine(
+            _engine_for(net, profile, cache, tables,
+                        explore_prob=explore_prob,
+                        tournament_k=tournament_k),
+            _mirror, retry=retry, fault_plan=fault_plan)
     base_key = jax.random.PRNGKey(seed)
-
-    state, init_out = engine.init(pop.cores, pop.perm)
-    evals_used = len(pop)
-    _charge(evaluator, len(pop))
-    init_host = jax.device_get(init_out)
-    seed_best_time = float(np.min(init_host["times"]))
     archive = EpsParetoArchive(pareto_eps)
-    archive.update_batch(init_host["times"], init_host["energies"],
-                         pop.cores, pop.perm)
 
-    first = jax.device_get({k: state[k] for k in ("times", "energies")})
-    history = [GenStats(generation=0,
-                        best_time=float(first["times"][0]),
-                        best_energy=float(first["energies"][0]),
-                        mean_time=float(np.mean(first["times"])),
-                        n_evals=evals_used,
-                        front_size=len(archive))]
+    if restored is not None:
+        arrays, gen0, meta = restored
+        if meta.get("engine") != "device":
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir!r} was written by the "
+                f"{meta.get('engine')!r} engine; resume it with "
+                f"engine={meta.get('engine')!r}")
+        state = {k: np.asarray(arrays[k]) for k in _STATE_KEYS}
+        archive.load_state(arrays)
+        history = [GenStats(**h) for h in meta["history"]]
+        evals_used = int(meta["evals_used"])
+        seed_best_time = float(meta["seed_best_time"])
+        n_pop = int(state["cores"].shape[0])
+        start_gen = gen0 + 1
+    else:
+        rng = np.random.default_rng(seed)
+        cands = list(seed_candidates if seed_candidates is not None else
+                     seeded_population(net, profile, size=population_size,
+                                       rng=rng, greedy=greedy))
+        if not cands:
+            raise ValueError("empty initial population")
+        if max_evaluations is not None:
+            cands = cands[:max(1, max_evaluations)]
+        pop = Population.from_candidates(cands)
 
-    n_pop = len(pop)
-    for gen in range(1, generations + 1):
+        state, init_out = engine.init(pop.cores, pop.perm)
+        evals_used = len(pop)
+        _charge(evaluator, len(pop))
+        init_host = jax.device_get(init_out)
+        # screen the raw seed objectives before they reach host stats or
+        # the archive (the archive rejects non-finite points itself; the
+        # sentinel keeps the min() below NaN-safe)
+        it, ie, _ = quarantine_rows(
+            np, np.asarray(init_host["times"], np.float64),
+            np.asarray(init_host["energies"], np.float64))
+        seed_best_time = float(np.min(it))
+        archive.update_batch(it, ie, pop.cores, pop.perm)
+
+        first = jax.device_get({k: state[k] for k in ("times", "energies")})
+        history = [GenStats(generation=0,
+                            best_time=float(first["times"][0]),
+                            best_energy=float(first["energies"][0]),
+                            mean_time=float(finite_mean(np, first["times"])),
+                            n_evals=evals_used,
+                            front_size=len(archive))]
+        n_pop = len(pop)
+        start_gen = 1
+
+    def _snapshot(gen: int) -> None:
+        host_state = jax.device_get(state)
+        arrays = {k: np.asarray(host_state[k]) for k in _STATE_KEYS}
+        arrays.update(archive.state_arrays(n_layers, n_slots))
+        meta = dict(engine="device", evals_used=int(evals_used),
+                    seed_best_time=float(seed_best_time),
+                    history=[dataclasses.asdict(g) for g in history])
+        ckpt.save(gen, arrays, meta)
+
+    if restored is None:
+        if ckpt is not None:
+            _snapshot(0)
+        if fault_plan is not None:
+            fault_plan.after_generation(0)
+
+    for gen in range(start_gen, generations + 1):
         n_off = n_pop
         if max_evaluations is not None:
             n_off = min(n_off, max_evaluations - evals_used)
@@ -532,7 +694,12 @@ def evolutionary_search_device(
             best_energy=float(stats_h["best_energy"]),
             mean_time=float(stats_h["mean_time"]),
             n_evals=evals_used,
-            front_size=len(archive)))
+            front_size=len(archive),
+            n_quarantined=int(stats_h.get("n_quarantined", 0))))
+        if ckpt is not None and ckpt.due(gen, generations):
+            _snapshot(gen)
+        if fault_plan is not None:
+            fault_plan.after_generation(gen)
 
     final = jax.device_get({k: state[k] for k in ("cores", "perm")})
     best = Candidate(tuple(int(x) for x in final["cores"][0]),
@@ -547,7 +714,8 @@ def evolutionary_search_device(
     return SearchResult(candidate=best, partition=part, mapping=mapping,
                         report=best_report, history=history,
                         n_evals=evals_used, seed_best_time=seed_best_time,
-                        front=front, front_reports=front_reports)
+                        front=front, front_reports=front_reports,
+                        demotions=list(getattr(engine, "demotions", ())))
 
 
 def _charge(evaluator, n: int) -> None:

@@ -79,11 +79,24 @@ class SimEvaluator:
     the device-resident search (``evolutionary_search(...,
     engine="device")``), which prices inside its own jitted generation
     step and charges ``n_evals`` here per generation.
+
+    Population pricing degrades gracefully (``docs/robustness.md``): a
+    backend failure — compile error, device OOM, runtime fault, or an
+    injected one — is retried per ``retry`` and then demoted down the
+    ``device -> vmap -> numpy`` chain (sticky; logged; recorded in
+    :attr:`demotions`).  The backends agree at float64 roundoff, so a
+    mid-run demotion perturbs a search trajectory by at most rtol=1e-9
+    against a numpy-only run.  ``fallback=False`` restores fail-fast
+    behavior.  ``fault_plan`` is the deterministic fault-injection hook
+    (:class:`repro.core.resilience.FaultPlan`): scripted backend failures
+    and NaN pricing rows for the robustness suite.
     """
 
     def __init__(self, net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                  *, engine: str | None = None, cache=None,
-                 population_backend: str = "numpy", compute=None):
+                 population_backend: str = "numpy", compute=None,
+                 fault_plan=None, fallback: bool = True, retry=None):
+        from repro.core.resilience import FallbackChain
         from repro.neuromorphic import timestep
         self.net, self.xs, self.profile = net, xs, profile
         self.engine = engine or timestep.DEFAULT_ENGINE
@@ -99,6 +112,22 @@ class SimEvaluator:
                                                   compute=compute)
                       if self.engine == "batched" else None)
         self.n_evals = 0
+        self.fault_plan = fault_plan
+        self._chain = (FallbackChain(population_backend, retry=retry)
+                       if fallback else None)
+
+    @property
+    def demotions(self) -> list:
+        """Fallback-chain demotion records, oldest first (empty when the
+        chain is disabled or never fired)."""
+        return self._chain.demotions if self._chain is not None else []
+
+    @property
+    def active_backend(self) -> str:
+        """The population backend currently in use (differs from
+        ``population_backend`` after a demotion)."""
+        return (self._chain.backend if self._chain is not None
+                else self.population_backend)
 
     def __call__(self, part: Partition, mapping: Mapping) -> SimReport:
         self.n_evals += 1
@@ -111,16 +140,29 @@ class SimEvaluator:
     def evaluate_population(self, candidates) -> list[SimReport]:
         """Price a list of (partition, mapping) pairs; one stacked gather
         per layer (or one jitted program — ``population_backend="vmap"`` /
-        ``"device"``) when the pricing cache is live."""
+        ``"device"``) when the pricing cache is live.  Backend failures
+        retry, then demote down the fallback chain (see the class
+        docstring); scripted :class:`FaultPlan` faults inject here."""
         cands = list(candidates)
         self.n_evals += len(cands)
         if self.cache is not None:
-            return simulate_population(self.net, self.xs, self.profile,
-                                       cands, cache=self.cache,
-                                       backend=self.population_backend)
-        return [simulate(self.net, self.xs, self.profile, p, m,
-                         engine=self.engine, compute=self.compute)
-                for p, m in cands]
+            def attempt(backend):
+                if self.fault_plan is not None:
+                    self.fault_plan.check(backend)
+                return simulate_population(self.net, self.xs, self.profile,
+                                           cands, cache=self.cache,
+                                           backend=backend)
+            if self._chain is not None:
+                reports = self._chain.run(attempt)
+            else:
+                reports = attempt(self.population_backend)
+        else:
+            reports = [simulate(self.net, self.xs, self.profile, p, m,
+                                engine=self.engine, compute=self.compute)
+                       for p, m in cands]
+        if self.fault_plan is not None:
+            reports = self.fault_plan.corrupt(reports)
+        return reports
 
 
 @dataclasses.dataclass

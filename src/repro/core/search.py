@@ -64,6 +64,10 @@ import numpy as np
 
 from repro.core.partitioner import (Evaluator, OptimizationResult,
                                     optimize_partitioning)
+from repro.core.resilience import (FaultPlan, SearchCheckpointer,
+                                   decode_bytes_set, encode_bytes_set,
+                                   finite_mean, quarantine_rows,
+                                   rng_from_state, rng_state)
 from repro.neuromorphic.network import SimNetwork
 from repro.neuromorphic.noc import (Mapping, ordered_mapping, random_mapping,
                                     strided_mapping)
@@ -300,6 +304,11 @@ class EpsParetoArchive:
 
     def add(self, time: float, energy: float, cores: np.ndarray,
             perm: np.ndarray, report: SimReport) -> bool:
+        if not (np.isfinite(time) and np.isfinite(energy)):
+            # NaN compares False against everything, so an unscreened NaN
+            # point would pass both the epsilon-block test and the
+            # eviction test below and sit in front() forever
+            return False
         one_eps = 1.0 + self.eps
         for it in self._items:
             if it["time"] <= time * one_eps and \
@@ -343,6 +352,7 @@ class EpsParetoArchive:
         K = times.shape[0]
         if K == 0:
             return 0
+        finite = np.isfinite(times) & np.isfinite(energies)
         if self._items:
             one_eps = 1.0 + self.eps
             at = np.asarray([it["time"] for it in self._items])
@@ -352,6 +362,7 @@ class EpsParetoArchive:
                        ).any(axis=1)
         else:
             blocked = np.zeros(K, bool)
+        blocked |= ~finite             # non-finite points never enter
         added = 0
         for k in np.flatnonzero(~blocked):
             added += self.add(float(times[k]), float(energies[k]),
@@ -367,6 +378,35 @@ class EpsParetoArchive:
                  for it in items]
         return cands, [it["report"] for it in items]
 
+    def state_arrays(self, n_layers: int, n_slots: int) -> dict:
+        """Archive contents as stacked arrays in insertion order — the
+        checkpoint interchange form.  Reports are not serialized; a resumed
+        search re-prices the front once at the end (uncharged), exactly as
+        the device engine always does."""
+        items = self._items
+        return dict(
+            arch_times=np.asarray([it["time"] for it in items], np.float64),
+            arch_energies=np.asarray([it["energy"] for it in items],
+                                     np.float64),
+            arch_cores=(np.stack([it["cores"] for it in items])
+                        if items else np.zeros((0, n_layers), np.int32)),
+            arch_perm=(np.stack([it["perm"] for it in items])
+                       if items else np.zeros((0, n_slots), np.int32)))
+
+    def load_state(self, arrays: dict) -> None:
+        """Rebuild ``_items`` from :meth:`state_arrays` output.  Insertion
+        order is preserved, so subsequent :meth:`add`/:meth:`update_batch`
+        admissions and evictions replay identically to the run that wrote
+        the snapshot."""
+        self._items = [
+            dict(time=float(t), energy=float(e),
+                 cores=np.asarray(c, np.int32),
+                 perm=np.asarray(p, np.int32), report=None)
+            for t, e, c, p in zip(arrays["arch_times"],
+                                  arrays["arch_energies"],
+                                  arrays["arch_cores"],
+                                  arrays["arch_perm"])]
+
 
 @dataclasses.dataclass
 class GenStats:
@@ -375,9 +415,11 @@ class GenStats:
     generation: int
     best_time: float
     best_energy: float
-    mean_time: float
+    mean_time: float        # over FINITE survivors (quarantined rows carry
+                            # sentinel +inf fitness and are excluded)
     n_evals: int            # cumulative evaluations after this generation
     front_size: int = 0     # epsilon-archive size after this generation
+    n_quarantined: int = 0  # non-finite pricing rows screened this gen
 
 
 @dataclasses.dataclass
@@ -392,6 +434,10 @@ class SearchResult:
     #: epsilon-nondominated (time, energy) candidates, sorted by time
     front: list[Candidate] = dataclasses.field(default_factory=list)
     front_reports: list[SimReport] = dataclasses.field(default_factory=list)
+    #: backend demotions logged during THIS run (``resilience.Demotion``
+    #: records from the evaluator's fallback chain or the device engine's
+    #: mirror demotion); empty on a fault-free run
+    demotions: list = dataclasses.field(default_factory=list)
 
     def knee(self) -> tuple[Candidate, SimReport] | None:
         """The front's knee point (None when the front is empty)."""
@@ -408,6 +454,46 @@ def _evaluate(evaluator: Evaluator, pop: Population) -> list[SimReport]:
     if ep is not None:
         return ep(pairs)
     return [evaluator(p, m) for p, m in pairs]
+
+
+def _reprice_uncharged(evaluator: Evaluator,
+                       pop: Population) -> list[SimReport]:
+    """Re-price rows for report materialization (resume bootstrap, front
+    reports) without charging the evaluation ledger or consuming the
+    evaluator's fault-plan schedule — bookkeeping, not search work."""
+    n0 = getattr(evaluator, "n_evals", None)
+    plan = getattr(evaluator, "fault_plan", None)
+    if plan is not None:
+        evaluator.fault_plan = None
+    try:
+        reports = _evaluate(evaluator, pop)
+    finally:
+        if plan is not None:
+            evaluator.fault_plan = plan
+    if n0 is not None:
+        evaluator.n_evals = n0
+    return reports
+
+
+def _validate_search_args(net: SimNetwork, profile: ChipProfile, *,
+                          population_size: int, generations: int,
+                          seed_candidates) -> None:
+    """Early, actionable argument validation shared by both engines (the
+    alternative is a cryptic broadcast error generations into the run)."""
+    if population_size < 2:
+        raise ValueError(
+            f"population_size must be >= 2, got {population_size}: "
+            "tournament selection and (mu + lambda) survival need at "
+            "least two candidates")
+    if generations < 1:
+        raise ValueError(f"generations must be >= 1, got {generations}")
+    n_layers, n_slots = len(net.layers), int(profile.n_cores)
+    for i, c in enumerate(seed_candidates or ()):
+        if len(c.cores) != n_layers or len(c.perm) != n_slots:
+            raise ValueError(
+                f"seed candidate {i} has genome shape (cores={len(c.cores)},"
+                f" perm={len(c.perm)}) but this (network, profile) needs "
+                f"(cores={n_layers}, perm={n_slots})")
 
 
 # ------------------------------------------------------------------ seeding
@@ -582,6 +668,11 @@ def evolutionary_search(
     greedy: OptimizationResult | None = None,
     pareto_eps: float = 0.01,
     engine: str = "numpy",
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 3,
+    resume: bool = False,
+    fault_plan: FaultPlan | None = None,
 ) -> SearchResult:
     """Run the (mu + lambda) evolutionary mapping search, tensor-first.
 
@@ -607,7 +698,20 @@ def evolutionary_search(
     evaluator and follows its own PRNG-key contract (``docs/search.md``);
     the two engines are deterministic per seed but not sample-for-sample
     identical to each other.
+
+    Fault tolerance (``docs/robustness.md``): with ``checkpoint_dir`` the
+    search writes an atomic, self-contained snapshot every
+    ``checkpoint_every`` generations (``checkpoint_keep`` newest retained);
+    ``resume=True`` continues from the newest one **bit-identically** to
+    the uninterrupted run — the host RNG state, the phenotype dedup set,
+    the survivor fitness and the epsilon-archive all travel in the
+    snapshot.  Non-finite pricing rows are quarantined with sentinel-worst
+    fitness every generation.  ``fault_plan`` scripts deterministic faults
+    (injected backend failures, NaN rows, a simulated kill) for testing.
     """
+    _validate_search_args(net, profile, population_size=population_size,
+                          generations=generations,
+                          seed_candidates=seed_candidates)
     if engine == "device":
         from repro.core.device_search import evolutionary_search_device
         return evolutionary_search_device(
@@ -616,49 +720,104 @@ def evolutionary_search(
             explore_prob=explore_prob, seed=seed,
             max_evaluations=max_evaluations,
             seed_candidates=seed_candidates, greedy=greedy,
-            pareto_eps=pareto_eps)
+            pareto_eps=pareto_eps, checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, resume=resume,
+            fault_plan=fault_plan)
     if engine != "numpy":
         raise ValueError(f"unknown search engine {engine!r}")
-    rng = np.random.default_rng(seed)
+    ckpt = (SearchCheckpointer(checkpoint_dir, every=checkpoint_every,
+                               keep=checkpoint_keep)
+            if checkpoint_dir else None)
+    restored = ckpt.restore() if (ckpt is not None and resume) else None
+    if fault_plan is not None:
+        setattr(evaluator, "fault_plan", fault_plan)
+    n_demote0 = len(getattr(evaluator, "demotions", ()))
     tables = move_tables(net, profile)
-    cands = list(seed_candidates if seed_candidates is not None else
-                 seeded_population(net, profile, size=population_size,
-                                   rng=rng, greedy=greedy))
-    if not cands:
-        raise ValueError("empty initial population")
-    if max_evaluations is not None:
-        cands = cands[:max(1, max_evaluations)]
-    pop = Population.from_candidates(cands)
-    reports = _evaluate(evaluator, pop)
-    evals_used = len(pop)
-    times = np.asarray([r.time_per_step for r in reports])
-    energies = np.asarray([r.energy_per_step for r in reports])
-    seed_best_time = float(times.min())
-    # every phenotype ever priced, across generations
-    tried = {pop.phenotype(k) for k in range(len(pop))}
     archive = EpsParetoArchive(pareto_eps)
+    n_layers = len(net.layers)
+    n_slots = profile.n_cores
+
+    if restored is not None:
+        arrays, gen0, meta = restored
+        if meta.get("engine") != "numpy":
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir!r} was written by the "
+                f"{meta.get('engine')!r} engine; resume it with "
+                f"engine={meta.get('engine')!r}")
+        rng = rng_from_state(meta["rng_state"])
+        pop = Population(arrays["cores"], arrays["perm"])
+        times = np.asarray(arrays["times"], np.float64)
+        energies = np.asarray(arrays["energies"], np.float64)
+        # survivor reports (bottleneck stages / hot layers feed mutation)
+        # are rebuilt deterministically instead of being serialized; the
+        # checkpointed times/energies above stay authoritative
+        reports = _reprice_uncharged(evaluator, pop)
+        tried = decode_bytes_set(arrays["tried_buf"], arrays["tried_lens"])
+        archive.load_state(arrays)
+        history = [GenStats(**h) for h in meta["history"]]
+        evals_used = int(meta["evals_used"])
+        seed_best_time = float(meta["seed_best_time"])
+        start_gen = gen0 + 1
+    else:
+        rng = np.random.default_rng(seed)
+        cands = list(seed_candidates if seed_candidates is not None else
+                     seeded_population(net, profile, size=population_size,
+                                       rng=rng, greedy=greedy))
+        if not cands:
+            raise ValueError("empty initial population")
+        if max_evaluations is not None:
+            cands = cands[:max(1, max_evaluations)]
+        pop = Population.from_candidates(cands)
+        reports = _evaluate(evaluator, pop)
+        evals_used = len(pop)
+        times, energies, bad0 = quarantine_rows(
+            np, np.asarray([r.time_per_step for r in reports], np.float64),
+            np.asarray([r.energy_per_step for r in reports], np.float64))
+        seed_best_time = float(times.min())
+        start_gen = 1
+
+    # every phenotype ever priced, across generations (rebuilt on resume
+    # from the snapshot — NOT from the survivors, which are a subset)
+    if restored is None:
+        tried = {pop.phenotype(k) for k in range(len(pop))}
 
     def _order(t, e):
         """(rank, time, energy) survival order — np.lexsort is keyed last
         first."""
         return np.lexsort((e, t, pareto_ranks(t, e)))
 
-    order = _order(times, energies)
-    pop = pop.take(order)
-    reports = [reports[k] for k in order]
-    times, energies = times[order], energies[order]
-    archive.update(pop, times, energies, reports)
+    def _snapshot(gen: int) -> None:
+        arrays = dict(cores=pop.cores, perm=pop.perm, times=times,
+                      energies=energies)
+        arrays["tried_buf"], arrays["tried_lens"] = encode_bytes_set(tried)
+        arrays.update(archive.state_arrays(n_layers, n_slots))
+        meta = dict(engine="numpy", rng_state=rng_state(rng),
+                    evals_used=int(evals_used),
+                    seed_best_time=float(seed_best_time),
+                    history=[dataclasses.asdict(g) for g in history])
+        ckpt.save(gen, arrays, meta)
 
-    history = [GenStats(generation=0,
-                        best_time=float(times[0]),
-                        best_energy=float(energies[0]),
-                        mean_time=float(times.mean()),
-                        n_evals=evals_used,
-                        front_size=len(archive))]
+    if restored is None:
+        order = _order(times, energies)
+        pop = pop.take(order)
+        reports = [reports[k] for k in order]
+        times, energies = times[order], energies[order]
+        archive.update(pop, times, energies, reports)
 
-    n_layers = len(net.layers)
-    n_slots = profile.n_cores
-    for gen in range(1, generations + 1):
+        history = [GenStats(generation=0,
+                            best_time=float(times[0]),
+                            best_energy=float(energies[0]),
+                            mean_time=float(finite_mean(np, times)),
+                            n_evals=evals_used,
+                            front_size=len(archive),
+                            n_quarantined=int(bad0.sum()))]
+        if ckpt is not None:
+            _snapshot(0)
+        if fault_plan is not None:
+            fault_plan.after_generation(0)
+
+    for gen in range(start_gen, generations + 1):
         n_off = population_size
         if max_evaluations is not None:
             n_off = min(n_off, max_evaluations - evals_used)
@@ -686,8 +845,10 @@ def evolutionary_search(
         off_pop = Population(off_cores, off_perm)
         off_reports = _evaluate(evaluator, off_pop)
         evals_used += len(off_pop)
-        off_times = np.asarray([r.time_per_step for r in off_reports])
-        off_energies = np.asarray([r.energy_per_step for r in off_reports])
+        off_times, off_energies, off_bad = quarantine_rows(
+            np,
+            np.asarray([r.time_per_step for r in off_reports], np.float64),
+            np.asarray([r.energy_per_step for r in off_reports], np.float64))
         archive.update(off_pop, off_times, off_energies, off_reports)
 
         # (mu + lambda) elitist survival over unique candidates
@@ -712,17 +873,29 @@ def evolutionary_search(
             generation=gen,
             best_time=float(times[0]),
             best_energy=float(energies[0]),
-            mean_time=float(times.mean()),
+            mean_time=float(finite_mean(np, times)),
             n_evals=evals_used,
-            front_size=len(archive)))
+            front_size=len(archive),
+            n_quarantined=int(off_bad.sum())))
+        if ckpt is not None and ckpt.due(gen, generations):
+            _snapshot(gen)
+        if fault_plan is not None:
+            fault_plan.after_generation(gen)
 
     best, best_r = pop.candidate(0), reports[0]
     front, front_reports = archive.front()
+    if front and any(r is None for r in front_reports):
+        # restored archive items carry no report; materialize them once,
+        # uncharged (front() is (time, energy)-sorted, as is the repricing)
+        front_reports = _reprice_uncharged(
+            evaluator, Population.from_candidates(front))
     return SearchResult(candidate=best, partition=best.partition(),
                         mapping=best.mapping(), report=best_r,
                         history=history, n_evals=evals_used,
                         seed_best_time=seed_best_time,
-                        front=front, front_reports=front_reports)
+                        front=front, front_reports=front_reports,
+                        demotions=list(
+                            getattr(evaluator, "demotions", ()))[n_demote0:])
 
 
 def greedy_then_evolve(net: SimNetwork, profile: ChipProfile,

@@ -432,6 +432,13 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
     cands = list(candidates)
     if not cands:
         return []
+    for k, (part, mapping) in enumerate(cands):
+        if len(mapping.phys) != part.total_cores:
+            raise ValueError(
+                f"candidate {k}: mapping places {len(mapping.phys)} logical "
+                f"cores but the partition allocates {part.total_cores} "
+                f"(cores={tuple(part.cores)}); partition and mapping must "
+                "agree before pricing")
     cache = cache or precompute_pricing(net, xs, profile,
                                         precomputed=precomputed,
                                         compute=compute)
@@ -1030,6 +1037,14 @@ def price_population_device(net: SimNetwork, profile: ChipProfile,
     only materializing reports for the candidates they return.
     """
     pricer = device_pricer(net, profile, cache)
+    n_layers, n_slots = len(cache.layers), int(profile.n_cores)
+    if (np.ndim(cores) != 2 or np.ndim(perm) != 2
+            or cores.shape[1] != n_layers or perm.shape[1] != n_slots
+            or cores.shape[0] != perm.shape[0]):
+        raise ValueError(
+            f"genome rows must be cores (K, {n_layers}) and perm "
+            f"(K, {n_slots}) for this (network, profile); got "
+            f"cores {np.shape(cores)} and perm {np.shape(perm)}")
     out = pricer.price(cores, perm)
     n_logical = np.asarray(jax.device_get(cores), np.int64).sum(axis=1)
     return _assemble_reports(out, n_logical, cache,

@@ -88,7 +88,36 @@ def _gc(ckpt_dir: str, keep: int):
             pass
 
 
+def _scan_steps(ckpt_dir: str) -> list[int]:
+    """Step numbers of the complete single-file checkpoints on disk.
+    Partial writes never match: they live under ``tmp.<step>.npz`` until
+    the atomic ``os.replace``."""
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    steps = []
+    for f in names:
+        if f.startswith("step_") and f.endswith(".npz"):
+            try:
+                steps.append(int(f[len("step_"):-len(".npz")]))
+            except ValueError:          # host-sharded / foreign names
+                pass
+    return sorted(steps)
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest COMPLETE checkpoint step.
+
+    The ``step_<N>.npz`` files are authoritative — each lands via one
+    atomic ``os.replace``, so scanning them survives a crash *between*
+    the npz replace and the ``meta.json`` replace (where meta is one step
+    stale) and a torn/lost ``meta.json``.  ``meta.json`` is consulted
+    only when no single-file checkpoints are found (multi-host shards use
+    ``step_<N>.host<k>.npz`` names the scan skips)."""
+    steps = _scan_steps(ckpt_dir)
+    if steps:
+        return steps[-1]
     meta = os.path.join(ckpt_dir, "meta.json")
     if not os.path.exists(meta):
         return None
@@ -117,6 +146,15 @@ def restore(ckpt_dir: str, like_state, *, shardings=None,
         a = a.astype(like.dtype) if a.dtype != like.dtype else a
         out.append(jax.device_put(a, sh) if sh is not None else a)
     state = jax.tree_util.tree_unflatten(treedef, out)
-    with open(os.path.join(ckpt_dir, "meta.json")) as f:
-        extra = json.load(f).get("extra", {})
+    extra = {}
+    meta_path = os.path.join(ckpt_dir, "meta.json")
+    if os.path.exists(meta_path):
+        with open(meta_path) as f:
+            meta = json.load(f)
+        # extra describes the step meta.json last recorded; pairing it
+        # with a different step's arrays (older step requested, or meta
+        # one step behind after a crash between the two replaces) would
+        # silently desynchronize e.g. the data-iterator state
+        if meta.get("latest_step") == step:
+            extra = meta.get("extra", {})
     return state, step, extra

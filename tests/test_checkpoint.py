@@ -1,0 +1,186 @@
+"""Recovery tests for :mod:`repro.train.checkpoint` and the search-side
+:class:`repro.core.resilience.SearchCheckpointer` built on it.
+
+The properties under test are the crash-safety invariants documented in
+``docs/robustness.md``: a partial write (``tmp.<step>`` left behind by a
+crash mid-save) is never restored; a crash *between* the npz replace and
+the ``meta.json`` replace still restores the newest complete snapshot
+without pairing its arrays with the stale meta; ``keep``-pruning retains
+exactly the newest ``keep`` steps whatever the save order.
+"""
+
+import json
+import os
+import shutil
+import tempfile
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.resilience import (SearchCheckpointer, decode_bytes_set,
+                                   encode_bytes_set, rng_from_state,
+                                   rng_state)
+from repro.train import checkpoint as ckpt
+
+quick = pytest.mark.quick
+pytestmark = pytest.mark.timeout(120)
+
+
+def _state(step: int) -> dict:
+    return {"w": np.full((3, 2), float(step)),
+            "b": np.arange(4) + step}
+
+
+class TestKeepPruning:
+    @quick
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(min_value=1, max_value=6),
+           st.integers(min_value=1, max_value=12))
+    def test_round_trip_keeps_newest(self, keep, n_steps):
+        """Whatever (keep, n_steps): only the newest ``keep`` step files
+        survive, ``latest_step`` is the max, and restoring any surviving
+        step round-trips its arrays exactly.  (No pytest fixtures here:
+        ``@given`` tests cannot take function-scoped fixtures.)"""
+        d = tempfile.mkdtemp(prefix="ckpt-prop-")
+        try:
+            for s in range(1, n_steps + 1):
+                ckpt.save(d, s, _state(s), extra={"s": s}, keep=keep)
+            on_disk = sorted(f for f in os.listdir(d)
+                             if f.startswith("step_") and f.endswith(".npz"))
+            expect = [f"step_{s:08d}.npz"
+                      for s in range(max(1, n_steps - keep + 1), n_steps + 1)]
+            assert on_disk == expect
+            assert ckpt.latest_step(d) == n_steps
+            for s in range(max(1, n_steps - keep + 1), n_steps + 1):
+                state, got, extra = ckpt.restore(d, _state(0), step=s)
+                assert got == s
+                np.testing.assert_array_equal(state["w"], _state(s)["w"])
+                np.testing.assert_array_equal(state["b"], _state(s)["b"])
+                # extra pairs only with the step meta.json describes
+                assert extra == ({"s": s} if s == n_steps else {})
+        finally:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+class TestCrashMidSave:
+    @quick
+    def test_partial_tmp_write_is_ignored(self, tmp_path):
+        """A crash mid-``np.savez`` leaves ``tmp.<step>.npz`` garbage; the
+        atomic-replace layout means restore never sees it and loads the
+        newest COMPLETE checkpoint instead."""
+        d = str(tmp_path)
+        ckpt.save(d, 1, _state(1), extra={"s": 1})
+        ckpt.save(d, 2, _state(2), extra={"s": 2})
+        # crash while writing step 3: truncated npz under the tmp name
+        with open(os.path.join(d, "tmp.3.npz"), "wb") as f:
+            f.write(b"PK\x03\x04 not a complete archive")
+        assert ckpt.latest_step(d) == 2
+        state, step, extra = ckpt.restore(d, _state(0))
+        assert step == 2
+        np.testing.assert_array_equal(state["w"], _state(2)["w"])
+        assert extra == {"s": 2}
+
+    @quick
+    def test_crash_between_npz_and_meta_replace(self, tmp_path):
+        """Crash after ``os.replace`` of ``step_3.npz`` but before the
+        ``meta.json`` replace: meta still says step 2.  The step files are
+        authoritative — restore finds step 3 — and the stale meta's
+        ``extra`` (which describes step 2's iterator state) must NOT be
+        paired with step 3's arrays."""
+        d = str(tmp_path)
+        ckpt.save(d, 2, _state(2), extra={"iterator": "after-step-2"})
+        meta_before = open(os.path.join(d, "meta.json")).read()
+        ckpt.save(d, 3, _state(3), extra={"iterator": "after-step-3"})
+        # roll meta.json back to simulate the crash window
+        with open(os.path.join(d, "meta.json"), "w") as f:
+            f.write(meta_before)
+        assert json.load(open(os.path.join(d, "meta.json")))[
+            "latest_step"] == 2
+        assert ckpt.latest_step(d) == 3
+        state, step, extra = ckpt.restore(d, _state(0))
+        assert step == 3
+        np.testing.assert_array_equal(state["w"], _state(3)["w"])
+        assert extra == {}          # stale extra withheld, not mispaired
+
+    @quick
+    def test_lost_meta_json(self, tmp_path):
+        """A torn/deleted ``meta.json`` does not orphan the checkpoints."""
+        d = str(tmp_path)
+        ckpt.save(d, 5, _state(5))
+        os.remove(os.path.join(d, "meta.json"))
+        assert ckpt.latest_step(d) == 5
+        _, step, extra = ckpt.restore(d, _state(0))
+        assert step == 5 and extra == {}
+
+
+class TestSearchCheckpointer:
+    @quick
+    def test_snapshot_round_trip_is_self_contained(self, tmp_path):
+        """Arrays + embedded JSON meta round-trip through one npz; the
+        sidecar ``meta.json`` is never needed to restore."""
+        d = str(tmp_path)
+        sc = SearchCheckpointer(d, keep=2)
+        rng = np.random.default_rng(7)
+        rng.integers(0, 100, size=13)          # advance the stream
+        tried = {b"alpha", b"bravo-longer", b""}
+        buf, lens = encode_bytes_set(tried)
+        arrays = {"cores": np.arange(6, dtype=np.int32).reshape(2, 3),
+                  "times": np.asarray([1.5, 2.5]),
+                  "tried_buf": buf, "tried_lens": lens}
+        meta = {"engine": "numpy", "rng_state": rng_state(rng),
+                "evals_used": 42, "history": [{"generation": 0}]}
+        sc.save(3, arrays, meta)
+        os.remove(os.path.join(d, "meta.json"))
+        got_arrays, gen, got_meta = sc.restore()
+        assert gen == 3
+        np.testing.assert_array_equal(got_arrays["cores"], arrays["cores"])
+        np.testing.assert_array_equal(got_arrays["times"], arrays["times"])
+        assert decode_bytes_set(got_arrays["tried_buf"],
+                                got_arrays["tried_lens"]) == tried
+        assert got_meta["engine"] == "numpy"
+        assert got_meta["evals_used"] == 42
+        # the restored RNG continues the stream bit-identically
+        rng2 = rng_from_state(got_meta["rng_state"])
+        ref = np.random.default_rng(7)
+        ref.integers(0, 100, size=13)
+        np.testing.assert_array_equal(rng2.integers(0, 1 << 30, size=8),
+                                      ref.integers(0, 1 << 30, size=8))
+
+    @quick
+    def test_restore_empty_dir_returns_none(self, tmp_path):
+        assert SearchCheckpointer(str(tmp_path / "nope")).restore() is None
+        assert SearchCheckpointer(str(tmp_path / "nope")).latest() is None
+
+    @quick
+    def test_due_cadence(self):
+        sc = SearchCheckpointer("unused", every=3)
+        assert [g for g in range(9) if sc.due(g, generations=8)] \
+            == [0, 3, 6, 8]        # every 3rd plus always the final gen
+
+    @quick
+    def test_meta_key_is_reserved(self, tmp_path):
+        sc = SearchCheckpointer(str(tmp_path))
+        with pytest.raises(ValueError, match="reserved"):
+            sc.save(0, {"_meta_json": np.zeros(1)}, {})
+
+
+class TestSerializationHelpers:
+    @quick
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(min_value=0, max_value=9),
+           st.integers(min_value=0, max_value=40))
+    def test_bytes_set_round_trip(self, n_keys, seed):
+        rng = np.random.default_rng(seed)
+        keys = {rng.integers(0, 256, size=int(rng.integers(0, 24)))
+                .astype(np.uint8).tobytes() for _ in range(n_keys)}
+        buf, lens = encode_bytes_set(keys)
+        assert decode_bytes_set(buf, lens) == keys
+
+    @quick
+    def test_rng_state_wrong_bit_generator_rejected(self):
+        state = dict(rng_state(np.random.default_rng(0)))
+        state["bit_generator"] = "MT19937"
+        with pytest.raises(ValueError, match="MT19937"):
+            rng_from_state(state)

@@ -302,6 +302,30 @@ class TestSearch:
 
         check()
 
+    @quick
+    def test_eps_archive_rejects_non_finite_points(self):
+        """Regression: a NaN point admitted to the archive is never
+        dominated (NaN comparisons are all False) and would pin the front
+        forever; inf points must lose to every finite one.  Both ``add``
+        and ``update_batch`` refuse them outright."""
+        cores = np.ones(2, np.int32)
+        perm = np.arange(4, dtype=np.int32)
+        arch = EpsParetoArchive(eps=0.05)
+        assert arch.add(2.0, 3.0, cores, perm, None)
+        for t, e in ((np.nan, 1.0), (1.0, np.nan), (np.inf, 1.0),
+                     (1.0, -np.inf), (np.nan, np.nan)):
+            assert not arch.add(t, e, cores, perm, None)
+        assert len(arch) == 1
+        K = 5
+        t = np.array([1.0, np.nan, 0.5, np.inf, 0.25])
+        e = np.array([1.0, 0.1, np.nan, 0.1, 0.5])
+        batch = EpsParetoArchive(eps=0.05)
+        added = batch.update_batch(
+            t, e, np.tile(cores, (K, 1)), np.tile(perm, (K, 1)))
+        assert added == 2                      # only the finite rows 0, 4
+        assert all(np.isfinite(it["time"]) and np.isfinite(it["energy"])
+                   for it in batch._items)
+
     def test_search_returns_front_with_knee(self):
         net, xs = fc_workload(sizes=(96, 128, 64), steps=2)
         prof = loihi2_like()
