@@ -34,6 +34,9 @@ def main(argv=None):
                     choices=("dense", "event"),
                     help="per-layer synaptic compute backend for every "
                          "experiment (default: dense)")
+    ap.add_argument("--arch", default=None,
+                    help="registry arch id for the model_zoo experiment "
+                         "(default: one smoke arch per family)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
@@ -49,12 +52,14 @@ def main(argv=None):
         compute.DEFAULT_COMPUTE = args.compute
 
     from benchmarks import (act_schedules, compute_floor, max_synops,
-                            search_mapping, sim_speed, stage1_sparsity,
-                            stage2_partitioning, tpu_roofline,
-                            traffic_mapping, weight_format, weight_sparsity)
+                            model_zoo, search_mapping, sim_speed,
+                            stage1_sparsity, stage2_partitioning,
+                            tpu_roofline, traffic_mapping, weight_format,
+                            weight_sparsity)
 
     mods = [
         ("sim_speed", sim_speed),
+        ("model_zoo", model_zoo),
         ("fig2_3_weight_sparsity", weight_sparsity),
         ("fig4_weight_format", weight_format),
         ("fig5_act_schedules", act_schedules),
@@ -74,6 +79,8 @@ def main(argv=None):
         t0 = time.time()
         if mod is stage2_partitioning:
             res = mod.run(args.quick, stage1=stage1_res)
+        elif mod is model_zoo:
+            res = mod.run(args.quick, arch=args.arch)
         else:
             res = mod.run(args.quick)
         if mod is stage1_sparsity:

@@ -95,6 +95,28 @@ def sim_inputs(net: SimNetwork, density: float, steps: int = 6,
     return make_inputs(net.in_size, density, steps, seed)
 
 
+# ------------------------------------------------------- model-zoo family
+
+#: compiled-model workloads priced by default (one per paper-relevant
+#: family: attention LM, SSM, MoE); any ``repro.configs.registry`` id works
+MODEL_ZOO_ARCHS = ("gemma2-2b", "mamba2-1.3b", "olmoe-1b-7b")
+
+
+def model_zoo(arch_id: str = MODEL_ZOO_ARCHS[0], *,
+              act_density: float | None = None, seq_len: int = 16,
+              seed: int = 0):
+    """Real-model workload (``--arch``): compile a registry arch's smoke
+    config through :mod:`repro.neuromorphic.frontend` and pair it with the
+    loihi2-like profile (the only baked-in profile whose partitioning
+    allows the compiled stacks' layer splits).  Returns
+    ``(CompiledNetwork, profile)``; ``compiled.net`` drops into every
+    simulate/pricing/search surface like the fc/conv workloads above."""
+    from repro.neuromorphic.frontend import compile_network
+    compiled = compile_network(arch_id, seq_len=seq_len,
+                               act_density=act_density, seed=seed)
+    return compiled, loihi2_like()
+
+
 # ------------------------------------------------------- schedule helpers
 
 def schedule(name: str, n_layers: int, total: float) -> list[float]:

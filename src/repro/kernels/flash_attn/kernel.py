@@ -28,7 +28,8 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   bq: int, bk: int, n_kv_steps: int, causal: bool,
-                  window: int | None, softcap: float | None, scale: float):
+                  window: int | None, softcap: float | None, scale: float,
+                  kv_len: int | None):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -59,6 +60,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             ok &= q_pos >= k_pos
         if window is not None:
             ok &= (q_pos - k_pos) < window
+        if kv_len is not None:
+            ok &= k_pos < kv_len        # sequence padding (non-causal too)
         s = jnp.where(ok, s, NEG_INF)
 
         m_prev = m_ref[...]
@@ -83,6 +86,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
                            causal: bool = True, window: int | None = None,
                            softcap: float | None = None,
                            bq: int = 128, bk: int = 128,
+                           kv_len: int | None = None,
                            interpret: bool = True) -> jax.Array:
     """q: (B, Sq, H, hd); k/v: (B, Skv, K, hd); H % K == 0.
 
@@ -102,7 +106,7 @@ def flash_attention_pallas(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     kernel = functools.partial(
         _flash_kernel, bq=bq, bk=bk, n_kv_steps=n_kv, causal=causal,
-        window=window, softcap=softcap, scale=scale)
+        window=window, softcap=softcap, scale=scale, kv_len=kv_len)
     out = pl.pallas_call(
         kernel,
         grid=(B * H, Sq // bq, n_kv),

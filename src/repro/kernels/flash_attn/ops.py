@@ -17,9 +17,10 @@ def flash_attention(q, k, v, *, causal: bool = True,
                     bq: int = 128, bk: int = 128,
                     interpret: bool = True) -> jax.Array:
     """Pads Sq/Skv to block multiples, launches the kernel, slices back.
-    Padding keys are masked out via the causal/window mask for pad queries;
-    pad KV rows sit at positions > every real query and are causally
-    invisible."""
+    Pad queries produce garbage rows that are sliced off; pad KV rows are
+    masked inside the kernel via ``kv_len`` (the real key count), which
+    keeps non-causal attention — encoder/cross blocks lowered by the
+    model-zoo frontend — exact too."""
     B, Sq, H, hd = q.shape
     Skv = k.shape[1]
     pq = (-Sq) % bq
@@ -31,5 +32,6 @@ def flash_attention(q, k, v, *, causal: bool = True,
         v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
     out = flash_attention_pallas(q, k, v, causal=causal, window=window,
                                  softcap=softcap, bq=bq, bk=bk,
+                                 kv_len=Skv if pk else None,
                                  interpret=interpret)
     return out[:, :Sq]

@@ -14,6 +14,10 @@ from repro.neuromorphic.platform import (ChipProfile, akd1000_like, loihi2_like,
 from repro.neuromorphic.compute import (DenseCompute, EventCompute,
                                         LayerCompute, get_compute,
                                         register_compute)
+from repro.neuromorphic.frontend import (AttnSpec, CompiledNetwork,
+                                         LayerSpec, attention_probe,
+                                         compile_network, excluded_params,
+                                         lowering_spec)
 from repro.neuromorphic.network import (BatchCounters, SimLayer, SimNetwork,
                                         fc_network, make_inputs,
                                         programmed_fc_network)
@@ -37,6 +41,8 @@ __all__ = [
     "ChipProfile", "akd1000_like", "loihi2_like", "speck_like",
     "DenseCompute", "EventCompute", "LayerCompute", "get_compute",
     "register_compute",
+    "AttnSpec", "CompiledNetwork", "LayerSpec", "attention_probe",
+    "compile_network", "excluded_params", "lowering_spec",
     "BatchCounters", "SimLayer", "SimNetwork", "fc_network", "make_inputs",
     "programmed_fc_network",
     "Partition", "minimal_partition",

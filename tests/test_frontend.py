@@ -1,0 +1,220 @@
+"""Property suite for the model-zoo frontend (`repro.neuromorphic.frontend`).
+
+The compiler's contract is arithmetic: for every registry arch's smoke
+config the compiled layer widths, parameter nnz and per-token MAC totals
+must match the ``ModelCfg``/``EncDecCfg`` closed forms, and the compiled
+network must inherit the simulator's bit-parity guarantees unchanged —
+identical counters across ``compute="dense"``/``"event"`` (reusing the
+harness from ``tests/test_compute_backends.py``) and across
+``engine="batched"``/``"reference"``.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import registry
+from repro.models.common import BlockCfg, ModelCfg, MoECfg, SSDCfg
+from repro.neuromorphic import (attention_probe, compile_network,
+                                excluded_params, loihi2_like, lowering_spec,
+                                minimal_partition, simulate)
+from test_compute_backends import assert_backends_match
+
+quick = pytest.mark.quick
+
+ARCHS = registry.ARCH_IDS
+PARITY_ARCHS = ["gemma2-2b", "mamba2-1.3b", "olmoe-1b-7b", "whisper-base"]
+
+
+# ------------------------------------------------------ closed-form checks
+
+class TestClosedForm:
+    @quick
+    @pytest.mark.parametrize("arch_id", ARCHS)
+    def test_widths_chain_and_nnz(self, arch_id):
+        """Layers chain d_model -> ... -> vocab; every built mask realizes
+        exactly its spec's structural nnz."""
+        cn = compile_network(arch_id)
+        prev = cn.cfg.d_model
+        assert cn.net.in_size == cn.cfg.d_model
+        for spec, layer in zip(cn.specs, cn.net.layers):
+            assert layer.kind == "fc"
+            assert spec.fanin == prev == layer.weights.shape[0]
+            assert spec.width == layer.weights.shape[1]
+            assert layer.w_nnz == spec.nnz, spec.name
+            prev = spec.width
+        assert prev == cn.cfg.vocab_size          # head is last
+
+    @quick
+    @pytest.mark.parametrize("arch_id", ARCHS)
+    def test_param_identity(self, arch_id):
+        """sum(param nnz) + excluded_params == cfg.param_count(), exactly.
+        param_count() is independent arithmetic in repro.models — this ties
+        the lowering to the model stack's ground truth."""
+        cn = compile_network(arch_id)
+        assert (cn.param_layer_nnz() + excluded_params(cn.cfg)
+                == cn.cfg.param_count())
+
+    @quick
+    @pytest.mark.parametrize("arch_id", ARCHS)
+    def test_mac_closed_form(self, arch_id):
+        """Simulated per-layer MAC counters == T * spec.macs_per_token for
+        the dense-activity token pipeline."""
+        cn = compile_network(arch_id, seed=1)
+        T = 3
+        xs = cn.inputs(T, seed=2)
+        _, counters = cn.net.run_batch(xs)
+        for spec, c in zip(cn.specs, counters):
+            assert int(c.macs.sum()) == T * spec.macs_per_token, spec.name
+
+    @quick
+    def test_attention_context_window(self):
+        """scores width = heads * min(window, seq_len); the window bounds
+        the priced KV context."""
+        cfg = registry.get("gemma2-2b").smoke()
+        specs, attn = lowering_spec(cfg, seq_len=12)
+        widths = {s.name: s.width for s in specs}
+        assert widths["b0.attn.scores"] == cfg.n_heads * 8     # window=8
+        assert widths["b1.attn.scores"] == cfg.n_heads * 12    # global
+        assert attn[0].window == 8 and attn[1].window is None
+
+    @quick
+    def test_moe_router_topk_drives_density(self):
+        """Only top_k + shared expert blocks (plus router logits) emit
+        messages; the down projection's event MACs follow the active set."""
+        cfg = registry.get("olmoe-1b-7b").smoke()
+        moe = cfg.pattern[0].moe
+        cn = compile_network(cfg, seed=4)
+        up = next(l for l in cn.net.layers if l.name.endswith("experts_up"))
+        f = moe.d_ff
+        active = (moe.top_k + moe.n_shared_experts) * 2 * f + moe.n_experts
+        assert int(up.msg_gate.sum()) == active
+        xs = cn.inputs(2, seed=5)
+        _, counters = cn.net.run_batch(xs)
+        i_dn = next(i for i, l in enumerate(cn.net.layers)
+                    if l.name.endswith("experts_down"))
+        per_tok = (moe.top_k + moe.n_shared_experts) * f * cfg.d_model
+        assert int(counters[i_dn].macs.sum()) == 2 * per_tok
+        # MoE active-param arithmetic reproduced by counters: the inactive
+        # experts' down weights are never fetched event-side
+        assert int(counters[i_dn].macs.sum()) < 2 * cn.net.layers[i_dn].w_nnz
+
+    @quick
+    def test_flash_kernel_matches_oracle_at_lowered_shapes(self):
+        """compile(verify_attention=True) runs the real Pallas kernel
+        against its oracle at every lowered attention shape."""
+        cn = compile_network("gemma2-2b", verify_attention=True)
+        assert len(cn.attn_specs) == 4
+        out, ref = attention_probe(cn.attn_specs[0], seed=3)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+# -------------------------------------------------------- parity (reused)
+
+class TestParity:
+    @quick
+    @pytest.mark.parametrize("arch_id", PARITY_ARCHS)
+    def test_compute_backend_parity(self, arch_id):
+        cn = compile_network(arch_id)
+        xs = cn.inputs(5, seed=3)
+        assert_backends_match(cn.net, xs)
+
+    @quick
+    @pytest.mark.parametrize("arch_id", PARITY_ARCHS)
+    def test_engine_parity(self, arch_id):
+        cn = compile_network(arch_id)
+        xs = cn.inputs(4, seed=6)
+        prof = loihi2_like()
+        r_b = simulate(cn.net, xs, prof, engine="batched")
+        r_r = simulate(cn.net, xs, prof, engine="reference")
+        np.testing.assert_allclose(r_r.outputs, r_b.outputs,
+                                   rtol=1e-6, atol=1e-6)
+        assert np.array_equal(r_b.times, r_r.times)
+        assert np.array_equal(r_b.energies, r_r.energies)
+
+    @quick
+    def test_partitionable_on_loihi2(self):
+        prof = loihi2_like()
+        for arch_id in PARITY_ARCHS:
+            cn = compile_network(arch_id)
+            part = minimal_partition(cn.net, prof)
+            assert part.total_cores <= prof.n_cores
+
+    def test_sigma_delta_recurrent_lowering(self):
+        """recurrent_neuron="sd_relu" maps the state stream onto sigma-delta
+        messaging; parity guarantees must survive the delta chain."""
+        cn = compile_network("mamba2-1.3b", recurrent_neuron="sd_relu")
+        state = [l for l in cn.net.layers if l.name.endswith(".state")]
+        assert state and all(l.neuron_model == "sd_relu" and l.sends_deltas
+                             for l in state)
+        assert_backends_match(cn.net, cn.inputs(5, seed=7))
+
+    def test_act_density_programs_message_sparsity(self):
+        cn = compile_network("gemma2-2b", act_density=0.25, seed=8)
+        xs = cn.inputs(3, seed=9)
+        _, counters = cn.net.run_batch(xs)
+        for layer, c in zip(cn.net.layers, counters):
+            assert int(c.msgs_out.sum()) == \
+                3 * int(round(0.25 * layer.n_neurons))
+        assert_backends_match(cn.net, xs)
+
+
+# ------------------------------------------------------ hypothesis sweeps
+
+@given(st.integers(1, 2), st.integers(1, 2), st.sampled_from([4, 8]),
+       st.integers(8, 24), st.sampled_from([0, 8, 16]),
+       st.integers(0, 99))
+@settings(max_examples=8, deadline=None)
+def test_property_attn_block_lowering(kv, group, hd, d, d_ff, seed):
+    """Arbitrary tiny attention configs: the identity and MAC closed forms
+    hold for every (heads, kv_heads, head_dim, d_model, d_ff) draw."""
+    cfg = ModelCfg(name="prop", d_model=d, n_heads=kv * group,
+                   n_kv_heads=kv, head_dim=hd, vocab_size=32,
+                   pattern=(BlockCfg(kind="attn", d_ff=d_ff),), n_repeats=1,
+                   param_dtype="float32", compute_dtype="float32")
+    cn = compile_network(cfg, seq_len=6, seed=seed)
+    assert cn.param_layer_nnz() + excluded_params(cfg) == cfg.param_count()
+    xs = cn.inputs(2, seed=seed + 1)
+    _, counters = cn.net.run_batch(xs)
+    for spec, c in zip(cn.specs, counters):
+        assert int(c.macs.sum()) == 2 * spec.macs_per_token
+
+
+@given(st.integers(1, 3), st.integers(0, 3), st.integers(0, 2),
+       st.sampled_from([4, 8]), st.integers(0, 99))
+@settings(max_examples=8, deadline=None)
+def test_property_moe_lowering(top_k, extra, shared, d_ff, seed):
+    """MoE draws: router top-k + shared experts set the active expert
+    blocks; identity and event-MAC arithmetic hold for every draw."""
+    moe = MoECfg(n_experts=top_k + extra, top_k=top_k, d_ff=d_ff or 4,
+                 n_shared_experts=shared)
+    cfg = ModelCfg(name="prop-moe", d_model=8, n_heads=2, n_kv_heads=1,
+                   head_dim=4, vocab_size=16,
+                   pattern=(BlockCfg(kind="attn", moe=moe),), n_repeats=1,
+                   param_dtype="float32", compute_dtype="float32")
+    cn = compile_network(cfg, seq_len=4, seed=seed)
+    assert cn.param_layer_nnz() + excluded_params(cfg) == cfg.param_count()
+    xs = cn.inputs(2, seed=seed)
+    _, counters = cn.net.run_batch(xs)
+    for spec, c in zip(cn.specs, counters):
+        assert int(c.macs.sum()) == 2 * spec.macs_per_token
+
+
+@given(st.sampled_from([(8, 4, 4, 1), (16, 4, 8, 2), (24, 8, 4, 1)]),
+       st.integers(0, 99))
+@settings(max_examples=6, deadline=None)
+def test_property_ssd_lowering(shape, seed):
+    """SSD draws: the state layer wires 2*d_state + 2 taps per neuron and
+    the in/out projections carry the exact SSD parameter arithmetic."""
+    di, hd, stt, groups = shape
+    ssd = SSDCfg(d_inner=di, head_dim=hd, d_state=stt, n_groups=groups,
+                 chunk=4)
+    cfg = ModelCfg(name="prop-ssd", d_model=8, n_heads=1, n_kv_heads=1,
+                   head_dim=1, vocab_size=16,
+                   pattern=(BlockCfg(kind="ssd", ssd=ssd),), n_repeats=1,
+                   param_dtype="float32", compute_dtype="float32")
+    cn = compile_network(cfg, seed=seed)
+    assert cn.param_layer_nnz() + excluded_params(cfg) == cfg.param_count()
+    state = next(s for s in cn.specs if s.name.endswith(".state"))
+    assert state.nnz == di * (2 * stt + 2)
+    assert_backends_match(cn.net, cn.inputs(3, seed=seed))

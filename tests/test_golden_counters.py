@@ -1,0 +1,162 @@
+"""Golden-counter regression fixtures.
+
+Every pricing product is a function of the exact per-layer event counters,
+so silent counter drift anywhere in ``compute.py`` / ``timestep.py`` / the
+model-zoo frontend corrupts every downstream number while all parity suites
+(which compare backends against *each other*) still pass.  These fixtures
+freeze per-layer integer totals — MACs, weight fetches, input/output
+messages (NoC traffic), evented activations — for the characterization
+workloads and one compiled model smoke per family, and compare exactly.
+
+Regenerate (after an *intentional* counter-semantics change) with::
+
+    PYTHONPATH=src python tests/test_golden_counters.py --regen
+
+and justify the diff in the commit.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.neuromorphic import (SimLayer, SimNetwork, compile_network,
+                                make_inputs, programmed_fc_network)
+from repro.neuromorphic.network import _exact_density_mask
+
+quick = pytest.mark.quick
+
+GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
+FIELDS = ("msgs_in", "macs", "fetches_dense", "msgs_out", "acts_evented")
+
+
+# ------------------------------------------------------- workload builders
+# Deterministic by construction: fixed seeds, exact density masks.
+
+def _fc_characterization():
+    net = programmed_fc_network(
+        [32, 48, 48, 24], weight_densities=[0.8, 0.6, 0.9],
+        act_densities=[0.25, 0.5, 0.1], seed=11)
+    xs = make_inputs(32, 0.3, 8, seed=12)
+    return net, xs
+
+
+def _conv_characterization():
+    rng = np.random.default_rng(13)
+    layers, h, w, c_prev = [], 8, 8, 2
+    for i, c in enumerate((4, 8)):
+        wgt = rng.normal(0, 1 / 3.0, (3, 3, c_prev, c)).astype(np.float32)
+        wgt *= _exact_density_mask(wgt.shape, 0.6, rng)
+        layers.append(SimLayer(name=f"conv{i}", kind="conv", weights=wgt,
+                               stride=2, in_hw=(h, w)))
+        h, w, c_prev = h // 2, w // 2, c
+    wfc = rng.normal(0, 0.3, (h * w * c_prev, 10)).astype(np.float32)
+    layers.append(SimLayer(name="fc", kind="fc", weights=wfc))
+    net = SimNetwork(layers=layers, in_size=8 * 8 * 2)
+    xs = make_inputs(net.in_size, 0.3, 6, seed=14)
+    return net, xs
+
+
+def _compiled(arch_id):
+    def build():
+        compiled = compile_network(arch_id, seed=0)
+        return compiled.net, compiled.inputs(4, seed=5)
+    return build
+
+
+#: fixture name -> builder; one compiled smoke per family (lm/ssm/moe/encdec)
+WORKLOADS = {
+    "fc_characterization": _fc_characterization,
+    "conv_characterization": _conv_characterization,
+    "model_lm_gemma2": _compiled("gemma2-2b"),
+    "model_ssm_mamba2": _compiled("mamba2-1.3b"),
+    "model_moe_olmoe": _compiled("olmoe-1b-7b"),
+    "model_encdec_whisper": _compiled("whisper-base"),
+}
+
+
+def snapshot(name: str) -> dict:
+    """Per-layer integer counter totals (exact: counters are integer-valued
+    and well below 2**53, so float sums are lossless)."""
+    net, xs = WORKLOADS[name]()
+    _, counters = net.run_batch(xs)
+    layers = []
+    for lay, c in zip(net.layers, counters):
+        row = {"name": lay.name}
+        for f in FIELDS:
+            row[f] = int(np.asarray(getattr(c, f), np.float64).sum())
+        layers.append(row)
+    totals = {f: sum(r[f] for r in layers) for f in FIELDS}
+    return {"workload": name, "steps": int(xs.shape[0]),
+            "layers": layers, "totals": totals}
+
+
+def diff_snapshots(golden: dict, actual: dict) -> list[str]:
+    """Human-readable field-level mismatches (empty == identical)."""
+    out = []
+    if golden["steps"] != actual["steps"]:
+        out.append(f"steps: golden {golden['steps']} != {actual['steps']}")
+    gl, al = golden["layers"], actual["layers"]
+    if [r["name"] for r in gl] != [r["name"] for r in al]:
+        out.append(f"layer names: golden {[r['name'] for r in gl]} != "
+                   f"{[r['name'] for r in al]}")
+        return out
+    for g, a in zip(gl, al):
+        for f in FIELDS:
+            if g[f] != a[f]:
+                out.append(f"layer {g['name']!r} {f}: golden {g[f]} != "
+                           f"actual {a[f]} (drift {a[f] - g[f]:+d})")
+    for f in FIELDS:
+        if golden["totals"][f] != actual["totals"][f]:
+            out.append(f"TOTAL {f}: golden {golden['totals'][f]} != "
+                       f"actual {actual['totals'][f]}")
+    return out
+
+
+# ------------------------------------------------------------------- tests
+
+@quick
+@pytest.mark.parametrize("name", sorted(WORKLOADS))
+def test_counters_match_golden(name):
+    path = GOLDEN_DIR / f"{name}.json"
+    assert path.exists(), \
+        f"missing golden fixture {path}; regenerate with --regen"
+    golden = json.loads(path.read_text())
+    mismatches = diff_snapshots(golden, snapshot(name))
+    assert not mismatches, (
+        f"counter drift vs {path.name} — if intentional, regenerate the "
+        "fixture and justify the diff:\n  " + "\n  ".join(mismatches))
+
+
+@quick
+def test_diff_detects_perturbation():
+    """The harness itself must flag a single off-by-one counter."""
+    golden = json.loads((GOLDEN_DIR / "fc_characterization.json").read_text())
+    bad = json.loads(json.dumps(golden))          # deep copy
+    bad["layers"][1]["macs"] += 1
+    bad["totals"]["macs"] += 1
+    out = diff_snapshots(golden, bad)
+    assert any("macs" in line and "+1" in line for line in out), out
+
+
+# ------------------------------------------------------------------- regen
+
+def regen() -> None:
+    GOLDEN_DIR.mkdir(exist_ok=True)
+    for name in sorted(WORKLOADS):
+        snap = snapshot(name)
+        path = GOLDEN_DIR / f"{name}.json"
+        path.write_text(json.dumps(snap, indent=1) + "\n")
+        print(f"wrote {path} ({len(snap['layers'])} layers, "
+              f"{snap['totals']['macs']} total MACs)")
+
+
+if __name__ == "__main__":
+    import sys
+    if "--regen" in sys.argv:
+        regen()
+    else:
+        print(__doc__)

@@ -69,6 +69,36 @@ def test_flash_property_gqa(B, S, G, seed):
                                rtol=3e-5, atol=3e-5)
 
 
+def _zoo_specs():
+    """Unique attention shapes the model-zoo frontend lowers for the smoke
+    archs — the (heads, head_dim, seq) points that now matter."""
+    from repro.configs import registry
+    from repro.neuromorphic.frontend import lowering_spec
+    seen = {}
+    for arch in ("gemma2-2b", "mamba2-1.3b", "olmoe-1b-7b", "whisper-base"):
+        _, attn = lowering_spec(registry.get(arch).smoke())
+        for s in attn:
+            key = (s.heads, s.kv_heads, s.head_dim, s.seq, s.causal,
+                   s.window, s.softcap)
+            seen.setdefault(key, f"{arch}:{s.name}")
+    return [pytest.param(*k, id=v) for k, v in seen.items()]
+
+
+@pytest.mark.quick
+@pytest.mark.parametrize("H,K,hd,S,causal,window,softcap", _zoo_specs())
+def test_flash_compiler_lowered_shapes(H, K, hd, S, causal, window, softcap):
+    """Pallas vs oracle at exactly the shapes compile_network records as
+    AttnSpecs (GQA sliding-window/softcap, full-context, non-causal
+    encoder/cross) — CI coverage for the kernel where the frontend uses it."""
+    q, k, v = _rand(jax.random.PRNGKey(11), 1, S, S, H, K, hd, jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, interpret=True)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window,
+                              softcap=softcap)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
 def test_flash_rows_sum_to_one_property():
     """Degenerate v=1 -> output must be exactly 1 (softmax normalization
     survives the lazy accumulation)."""
