@@ -1,0 +1,45 @@
+"""Shared helpers for the benchmark JSON artifacts.
+
+The BENCH_*.json files accumulate sections from several independent
+benchmark modules (and from partial ``--only`` runs), so writers must
+merge-update their own sections instead of truncating everyone else's.
+:func:`merge_write_json` is the single write path: read-or-empty, update,
+atomic replace (a crashed run never leaves a half-written artifact).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+
+
+def merge_write_json(path: str, updates: dict) -> dict:
+    """Merge ``updates`` into the JSON object at ``path`` atomically.
+
+    Top-level keys in ``updates`` replace their previous values wholesale
+    (a section is one experiment's output — partial intra-section merges
+    would mix runs); everything else already recorded survives.  A
+    missing or corrupt file starts from ``{}``.  Returns the merged dict.
+    """
+    try:
+        with open(path) as f:
+            merged = json.load(f)
+        if not isinstance(merged, dict):
+            merged = {}
+    except (OSError, json.JSONDecodeError):
+        merged = {}
+    merged.update(updates)
+    d = os.path.dirname(os.path.abspath(path))
+    fd, tmp = tempfile.mkstemp(dir=d, prefix=os.path.basename(path) + ".")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(merged, f, indent=1, default=float)
+        os.replace(tmp, path)
+    except BaseException:
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
+    return merged

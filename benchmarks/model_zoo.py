@@ -18,7 +18,6 @@ per-token counter maps).  Appends a ``model_zoo`` section to
 
 from __future__ import annotations
 
-import json
 import os
 import time
 
@@ -140,14 +139,8 @@ def run(quick: bool = False, arch: str | None = None) -> dict:
                       full=not smoke) for a in archs]
     res = {"rows": rows, "smoke": smoke}
 
-    try:
-        with open(BENCH_PATH) as f:
-            bench = json.load(f)
-    except (OSError, json.JSONDecodeError):
-        bench = {}
-    bench["model_zoo"] = res
-    with open(BENCH_PATH, "w") as f:
-        json.dump(bench, f, indent=1, default=float)
+    from benchmarks._bench_io import merge_write_json
+    merge_write_json(BENCH_PATH, {"model_zoo": res})
     return res
 
 

@@ -9,7 +9,10 @@ shrinks the expensive ones further so the WHOLE suite — including the
 mapping-search head-to-head — finishes in a couple of minutes, as a CI
 smoke path.  ``--engine`` flips ``repro.neuromorphic.timestep.DEFAULT_ENGINE``
 and ``--compute`` flips ``repro.neuromorphic.compute.DEFAULT_COMPUTE`` for
-every experiment in the process.
+every experiment in the process.  ``--devices N`` forces ``N`` CPU host
+devices (via ``repro.launch.mesh.force_host_device_count``, applied
+before any benchmark module imports jax) so the sharded-search section
+exercises a real multi-device mesh on CPU CI.
 """
 
 from __future__ import annotations
@@ -37,12 +40,20 @@ def main(argv=None):
     ap.add_argument("--arch", default=None,
                     help="registry arch id for the model_zoo experiment "
                          "(default: one smoke arch per family)")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N CPU host devices for the sharded-search "
+                         "section (must run before jax initializes)")
     args = ap.parse_args(argv)
     if args.smoke:
         args.quick = True
     # authoritative per-invocation: a stale/inherited value must not flip
     # benchmark sizes without the flag
     os.environ["REPRO_BENCH_SMOKE"] = "1" if args.smoke else "0"
+
+    if args.devices is not None:
+        # before the repro/benchmark imports below pull in jax
+        from repro.launch.mesh import force_host_device_count
+        force_host_device_count(args.devices)
 
     if args.engine:
         from repro.neuromorphic import timestep

@@ -22,15 +22,30 @@ throughput microbenchmarks:
   device-resident engine whose whole generation step is one jitted program
   (``repro.core.search``, ``engine="device"``).  The headline number is
   ``device_speedup_vs_vmap``.
+
+Plus the multi-device section (``sharded``): the island-model
+``engine="sharded"`` vs the single-device engine at EQUAL total
+population, across every visible device.  On CPU, run with ``--devices N``
+(applied before jax initializes — see ``repro.launch.mesh``) to shard over
+``N`` forced host devices; the headline is ``sharded_speedup_vs_device``.
+
+Sections merge-update ``BENCH_search.json`` (other sections survive).
 """
 
 from __future__ import annotations
 
-import json
 import os
+import sys
 import time
 
+if __name__ == "__main__":
+    # --devices must rewrite XLA_FLAGS before anything imports jax; the
+    # argparse pass below keeps the flag for --help and validation
+    from repro.launch.mesh import apply_devices_flag
+    apply_devices_flag(sys.argv[1:])
+
 from benchmarks import workloads as W
+from benchmarks._bench_io import merge_write_json
 from repro.core.partitioner import SimEvaluator, optimize_partitioning
 from repro.core.search import decode, evolutionary_search, seeded_population
 from repro.neuromorphic.noc import ordered_mapping
@@ -128,6 +143,44 @@ def _generation_throughput(net, xs, prof, *, pop: int, gens: int,
         out[f"device_pop{big}_size"] = len(big_seeds)
         out[f"device_pop{big}_gens_per_sec"] = gens / max(dt, 1e-9)
         out[f"device_pop{big}_evals_per_sec"] = res.n_evals / max(dt, 1e-9)
+    return out
+
+
+def _sharded_throughput(net, xs, prof, *, pop: int, gens: int,
+                        seed: int = 0) -> dict:
+    """Equal-total-population head-to-head of the single-device engine vs
+    the island-model sharded engine over every visible device.  Both arms
+    run the same jitted generation step; the sharded arm splits the
+    population into one island per device (``migrate_every=2`` so the run
+    exercises the ring collective), warms its compile, then is timed over
+    ``gens`` generations."""
+    import numpy as np
+    import jax
+    n_dev = len(jax.devices())
+    shared = SimEvaluator(net, xs, prof)
+    seeds = seeded_population(net, prof, size=pop,
+                              rng=np.random.default_rng(seed))
+    seeds = seeds[:len(seeds) - len(seeds) % n_dev]     # equal islands
+    out = {"pop_size": len(seeds), "generations": gens, "n_devices": n_dev}
+    arms = (("device", "device", {}),
+            ("sharded", "sharded", dict(n_islands=n_dev, migrate_every=2)))
+    for name, engine, kw in arms:
+        def run_once(n_gens, _engine=engine, _kw=kw):
+            ev = SimEvaluator(net, xs, prof, cache=shared.cache,
+                              population_backend="vmap")
+            return evolutionary_search(
+                net, prof, ev, population_size=len(seeds),
+                generations=n_gens, seed=seed, seed_candidates=list(seeds),
+                engine=_engine, **_kw)
+        run_once(1)                       # warm jit at this population
+        t0 = time.perf_counter()
+        res = run_once(gens)
+        dt = time.perf_counter() - t0
+        out[f"{name}_gens_per_sec"] = gens / max(dt, 1e-9)
+        out[f"{name}_evals_per_sec"] = res.n_evals / max(dt, 1e-9)
+        out[f"{name}_best_time"] = res.report.time_per_step
+    out["sharded_speedup_vs_device"] = (out["sharded_gens_per_sec"]
+                                        / out["device_gens_per_sec"])
     return out
 
 
@@ -244,8 +297,14 @@ def run(quick: bool = False, *, checkpoint_dir: str | None = None,
                                                            pop=gen_pop,
                                                            gens=gen_gens)
 
-    with open(BENCH_PATH, "w") as f:
-        json.dump(out, f, indent=1)
+    # island-model scaling at equal TOTAL population (one island per
+    # visible device; meaningful speedups need --devices N on CPU)
+    sh_pop = 64 if smoke else (512 if quick else 8192)
+    sh_gens = 2 if smoke else (2 if quick else 3)
+    out["sharded"] = _sharded_throughput(s5, xs, prof, pop=sh_pop,
+                                         gens=sh_gens)
+
+    merge_write_json(BENCH_PATH, out)
     return out
 
 
@@ -296,6 +355,14 @@ def report(res: dict) -> str:
                         f"{ge[key]:6.2f} gen/s "
                         f"({ge[f'device_pop{pop_k}_evals_per_sec']:8.1f} "
                         f"evals/s)")
+    sh = res.get("sharded")
+    if sh:
+        lines.append(
+            f"  sharded islands @ pop={sh['pop_size']} on "
+            f"{sh['n_devices']} device(s): "
+            f"device {sh['device_gens_per_sec']:6.2f} gen/s, "
+            f"sharded {sh['sharded_gens_per_sec']:6.2f} gen/s "
+            f"-> {sh['sharded_speedup_vs_device']:.2f}x")
     lines.append(f"  wrote {BENCH_PATH}")
     return "\n".join(lines)
 
@@ -313,6 +380,9 @@ def main(argv=None) -> int:
     ap.add_argument("--resume", action="store_true",
                     help="continue each evolutionary arm from its newest "
                          "snapshot in --checkpoint-dir")
+    ap.add_argument("--devices", type=int, default=None,
+                    help="force N CPU host devices for the sharded-engine "
+                         "section (applied before jax initializes)")
     args = ap.parse_args(argv)
     if args.resume and not args.checkpoint_dir:
         ap.error("--resume requires --checkpoint-dir")

@@ -21,7 +21,6 @@ Writes ``BENCH_sim.json`` at the repo root with two sections:
 
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
@@ -157,8 +156,8 @@ def run(quick: bool = False) -> dict:
         "compute": _bench_compute(quick, repeats if quick
                                   else max(repeats, 5)),
     }
-    with open(BENCH_PATH, "w") as f:
-        json.dump(out, f, indent=1)
+    from benchmarks._bench_io import merge_write_json
+    merge_write_json(BENCH_PATH, out)
     return out
 
 

@@ -1,4 +1,5 @@
-"""Device-resident evolutionary generation engine (``engine="device"``).
+"""Device-resident evolutionary generation engines (``engine="device"``
+and the island-model ``engine="sharded"``).
 
 The numpy engine in :mod:`repro.core.search` prices generations through the
 stacked population backends, but its generation *loop* — tournament draws,
@@ -49,6 +50,21 @@ reference for its own path, not for this one):
 * the population size is fixed at the seeded size: when fewer than
   ``population_size`` unique rows exist the best rows are duplicated
   rather than shrinking the batch (shapes must be static on device).
+
+**The sharded island engine** (:class:`ShardedSearchEngine`,
+``engine="sharded"``) scales this loop across a 1-D ``("island",)`` device
+mesh: the population's K axis is sharded so every device runs the SAME
+:func:`_generation_step` on its own subpopulation (an island), with elites
+rotating one island around a ``ppermute`` ring every ``migrate_every``
+generations and global stats assembled in-program via
+``all_gather``/``psum``.  Its PRNG contract extends the device engine's:
+island ``i`` of generation ``g`` draws under
+``fold_in(key, g * n_islands + i)`` (:func:`island_keys`), which for a
+single island reduces exactly to ``fold_in(key, g)`` — so a mesh of one
+reproduces ``engine="device"`` trajectories bit-identically, and
+:class:`_ShardedHostMirror` replays migration semantics on host NumPy
+(``docs/distributed.md``; parity asserted by
+``tests/test_sharded_search.py``).
 """
 
 from __future__ import annotations
@@ -62,10 +78,13 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 from jax.experimental import enable_x64
+from jax.sharding import PartitionSpec
 
 from repro.core.resilience import (Demotion, FaultPlan, RetryPolicy,
                                    SearchCheckpointer, finite_mean,
-                                   quarantine_rows)
+                                   quarantine_rows, validate_resume_meta)
+from repro.distributed.collectives import gather_islands, ring_shift
+from repro.distributed.compat import shard_map
 from repro.core.search import (Candidate, EpsParetoArchive, GenStats,
                                MoveTables, Population, SearchResult,
                                _validate_search_args, decode, move_tables,
@@ -111,6 +130,23 @@ def generation_draws(key, *, n_off: int, n_pop: int, n_layers: int,
         swap_iu=jax.random.uniform(ks[6], (n_off,), dtype=jnp.float64),
         swap_ju=jax.random.uniform(ks[7], (n_off,), dtype=jnp.float64),
     )
+
+
+def island_keys(base_key, gen: int, n_islands: int):
+    """The sharded engine's per-island PRNG-key contract.
+
+    Island ``i`` of generation ``g`` consumes :func:`generation_draws`
+    under ``fold_in(base_key, g * n_islands + i)`` — the ``(gen, island)``
+    pair packed into a single fold so that with ``n_islands == 1`` the
+    stream reduces EXACTLY to the device engine's ``fold_in(base_key, g)``
+    (the mesh-size-1 bit-parity contract).  Returns the stacked
+    ``(n_islands, key_size)`` keys; the sharded step's ``in_specs`` shard
+    them over the island axis, so each island reads row 0 of its block.
+    Derivation stays on host — the jitted step never folds keys itself, so
+    the host mirror consumes the identical key rows."""
+    g, n = int(gen), int(n_islands)
+    return jnp.stack([jax.random.fold_in(base_key, g * n + i)
+                      for i in range(n)])
 
 
 # ------------------------------------------------------- array-native moves
@@ -390,6 +426,174 @@ def _engine_for(net, profile, cache, tables, *, explore_prob,
     return engines[key]
 
 
+# ---------------------------------------------------------- sharded engine
+
+class ShardedSearchEngine:
+    """Island-model generation machinery over a 1-D ``("island",)`` mesh.
+
+    The population's K axis is sharded over the mesh: each device owns one
+    island's ``local_pop`` rows and runs the SAME :func:`_generation_step`
+    as :class:`DeviceSearchEngine` on them inside a jitted
+    ``shard_map`` program — selection, mutation and pricing never cross
+    islands, so generation throughput scales with the mesh while
+    per-island semantics stay identical to the single-device engine.
+    Collectives appear at exactly two points of the step:
+
+    * **migration** (the static ``migrate=True`` compile variant): each
+      island's elite block (rows ``[0:n_migrants]`` — state is kept
+      survival-sorted) is *rotated* one island forward around a
+      ``ppermute`` ring and replaces the recipient's elite block, after
+      which each island re-sorts locally.  A rotation moves rows — it
+      never copies or drops them — so the global genome multiset is
+      preserved exactly (property-tested in
+      ``tests/test_sharded_search.py``).
+    * **global stats**: the generation's best/mean objectives are reduced
+      in-program (``all_gather`` of the per-island leaders + ``psum`` of
+      the finite sums/counts, the :func:`finite_mean` formula) and
+      emitted once per island as ``(1,)`` slices; the host reads island
+      0's copy.  Per-generation host traffic therefore stays O(offspring)
+      and mesh-independent.
+
+    Host-side array layouts (checkpoints, the mirror, ``init`` inputs)
+    use island-block order: global row ``i * local_pop + r`` is island
+    ``i``'s row ``r``.  With one island every collective degenerates to
+    the identity and no ``migrate`` variant is ever compiled, so the
+    trajectory is bit-identical to :class:`DeviceSearchEngine` under the
+    :func:`island_keys` contract.
+    """
+
+    def __init__(self, net, profile, cache, tables: MoveTables, *, mesh,
+                 local_pop: int, n_migrants: int, explore_prob: float,
+                 tournament_k: int):
+        self.pricer = device_pricer(net, profile, cache)
+        self.mesh = mesh
+        self.n_islands = int(mesh.shape["island"])
+        self.local_pop = int(local_pop)
+        self.n_migrants = int(n_migrants)
+        self.explore_prob = float(explore_prob)
+        self.tournament_k = int(tournament_k)
+        self.n_layers = len(cache.layers)
+        self.n_slots = int(profile.n_cores)
+        self.n_phys = int(tables.n_cores_phys)
+        with enable_x64():
+            self.feasible = jnp.asarray(tables.feasible)
+        spec = PartitionSpec("island")
+        self._init_fn = self._wrap(self._init_impl, n_in=2,
+                                   out_specs=(spec, spec))
+        self._migrate_fn = self._wrap(self._migrate_impl, n_in=1,
+                                      out_specs=spec)
+        self._step_fns: dict = {}
+
+    def _wrap(self, f, *, n_in: int, out_specs):
+        """jit(shard_map(f)) with every input sharded over the island
+        axis (a spec is a pytree *prefix*, so one P("island") covers a
+        whole state dict)."""
+        spec = PartitionSpec("island")
+        return jax.jit(shard_map(f, mesh=self.mesh,
+                                 in_specs=(spec,) * n_in,
+                                 out_specs=out_specs, check_vma=False))
+
+    def _price(self, cores, perm):
+        o = jax.vmap(self.pricer.price_row)(cores, perm)
+        return dict(times=o["time_per_step"], energies=o["energy_per_step"],
+                    stage=o["stage"], hot_mem=o["hot_mem"],
+                    hot_act=o["hot_act"])
+
+    def _init_impl(self, cores, perm):
+        out = self._price(cores, perm)
+        state = _sorted_state(jnp, pareto_ranks_array, cores, perm, out,
+                              self.local_pop)
+        return state, dict(times=out["times"], energies=out["energies"])
+
+    def _migrate_impl(self, state):
+        m = self.n_migrants
+        inc = ring_shift({k: v[:m] for k, v in state.items()},
+                         size=self.n_islands)
+        merged = {k: state[k].at[:m].set(inc[k]) for k in state}
+        return _sorted_state(jnp, pareto_ranks_array, merged["cores"],
+                             merged["perm"], merged, self.local_pop)
+
+    def _global_stats(self, new, n_quar):
+        """Globally-reduced GenStats scalars, computed inside the sharded
+        program.  Every op sequence mirrors the single-device stats
+        (``new[...][0]`` leaders, the :func:`finite_mean` formula) with the
+        cross-island reduction spliced in — at one island the ``psum`` /
+        ``all_gather`` are identities, preserving bit parity."""
+        lead = gather_islands(dict(t=new["times"][0], e=new["energies"][0]))
+        tmin = lead["t"].min()
+        emin = jnp.where(lead["t"] == tmin, lead["e"], jnp.inf).min()
+        ok = jnp.isfinite(new["times"])
+        n_ok = jax.lax.psum(ok.sum(), "island")
+        total = jax.lax.psum(jnp.where(ok, new["times"], 0.0).sum(),
+                             "island")
+        mean = jnp.where(n_ok > 0, total / jnp.maximum(n_ok, 1),
+                         jnp.asarray(np.inf, dtype=total.dtype))
+        n_quar = jax.lax.psum(n_quar, "island")
+        return dict(best_time=tmin[None], best_energy=emin[None],
+                    mean_time=mean[None], n_quarantined=n_quar[None])
+
+    def _step_for(self, n_off: int, migrate: bool):
+        sig = (int(n_off), bool(migrate))
+        fn = self._step_fns.get(sig)
+        if fn is None:
+            spec = PartitionSpec("island")
+
+            def body(state, keys):
+                draws = generation_draws(keys[0], n_off=sig[0],
+                                         n_pop=self.local_pop,
+                                         n_layers=self.n_layers,
+                                         n_slots=self.n_slots,
+                                         tournament_k=self.tournament_k)
+                new, off, st = _generation_step(
+                    jnp, self._price, pareto_ranks_array, self.feasible,
+                    self.n_phys, self.explore_prob, state, draws)
+                if sig[1]:
+                    new = self._migrate_impl(new)
+                return new, off, self._global_stats(new,
+                                                    st["n_quarantined"])
+
+            fn = self._wrap(body, n_in=2, out_specs=(spec, spec, spec))
+            self._step_fns[sig] = fn
+        return fn
+
+    def init(self, cores, perm):
+        with enable_x64():
+            return self._init_fn(jnp.asarray(cores, jnp.int32),
+                                 jnp.asarray(perm, jnp.int32))
+
+    def step(self, state, keys, n_off: int, migrate: bool = False):
+        """One generation on every island from the stacked per-island
+        ``keys`` (:func:`island_keys`); ``n_off`` is the per-island
+        offspring count."""
+        with enable_x64():
+            return self._step_for(n_off, migrate)(state, jnp.asarray(keys))
+
+    def migrate(self, state):
+        """The migration collective alone (jitted) — the unit the
+        multiset-preservation property test drives directly."""
+        with enable_x64():
+            return self._migrate_fn(state)
+
+
+def _sharded_engine_for(net, profile, cache, tables, *, mesh, local_pop,
+                        n_migrants, explore_prob,
+                        tournament_k) -> ShardedSearchEngine:
+    """Sharded engines are cached on the workload's device pricer like the
+    single-device ones, additionally keyed by the island geometry and the
+    exact device assignment (a different mesh must recompile)."""
+    pricer = device_pricer(net, profile, cache)
+    engines = pricer.__dict__.setdefault("_sharded_engines", {})
+    key = (float(explore_prob), int(tournament_k), int(local_pop),
+           int(n_migrants), tuple(d.id for d in mesh.devices.flat))
+    if key not in engines:
+        engines[key] = ShardedSearchEngine(net, profile, cache, tables,
+                                           mesh=mesh, local_pop=local_pop,
+                                           n_migrants=n_migrants,
+                                           explore_prob=explore_prob,
+                                           tournament_k=tournament_k)
+    return engines[key]
+
+
 # -------------------------------------------------------- reference mirror
 
 class _NumpyMirror:
@@ -401,6 +605,9 @@ class _NumpyMirror:
     tested against — not a production path (use the numpy engine of
     :func:`repro.core.search.evolutionary_search` for host-only runs).
     """
+
+    #: state handed to this engine must be fetched to host first
+    host_state = True
 
     def __init__(self, net, xs, profile, cache, tables, *, explore_prob,
                  tournament_k, fault_plan: FaultPlan | None = None):
@@ -452,28 +659,135 @@ class _NumpyMirror:
                                 self.explore_prob, state, draws)
 
 
+class _ShardedHostMirror:
+    """Host NumPy replay of the island engine — migration's semantic spec.
+
+    Wraps one :class:`_NumpyMirror` for pricing and runs each island's
+    generation sequentially over its block of the (island-block-ordered)
+    global host state, consuming row ``i`` of the same :func:`island_keys`
+    stack the sharded step shards.  Migration is the same elite-block
+    rotation in list form: island ``i`` receives island ``i-1``'s elites
+    (``ppermute`` ring direction), then re-sorts locally.  Doubles as the
+    demotion target of the sharded :class:`_ResilientEngine` — a mid-run
+    demotion continues the same trajectory to float64 roundoff.
+    """
+
+    host_state = True
+
+    def __init__(self, net, xs, profile, cache, tables, *, n_islands,
+                 local_pop, n_migrants, explore_prob, tournament_k,
+                 fault_plan: FaultPlan | None = None):
+        self.base = _NumpyMirror(net, xs, profile, cache, tables,
+                                 explore_prob=explore_prob,
+                                 tournament_k=tournament_k,
+                                 fault_plan=fault_plan)
+        self.n_islands = int(n_islands)
+        self.local_pop = int(local_pop)
+        self.n_migrants = int(n_migrants)
+
+    def _blocks(self, state):
+        L = self.local_pop
+        return [{k: np.asarray(state[k])[i * L:(i + 1) * L] for k in state}
+                for i in range(self.n_islands)]
+
+    def _stats(self, blocks, n_quar):
+        ts = np.asarray([b["times"][0] for b in blocks])
+        es = np.asarray([b["energies"][0] for b in blocks])
+        tmin = ts.min()
+        emin = np.where(ts == tmin, es, np.inf).min()
+        ok = [np.isfinite(b["times"]) for b in blocks]
+        n_ok = np.sum([m.sum() for m in ok])
+        total = np.sum([np.where(m, b["times"], 0.0).sum()
+                        for b, m in zip(blocks, ok)])
+        mean = total / max(n_ok, 1) if n_ok > 0 else np.inf
+        n = self.n_islands
+        return dict(best_time=np.full(n, tmin),
+                    best_energy=np.full(n, emin),
+                    mean_time=np.full(n, mean, np.float64),
+                    n_quarantined=np.full(n, n_quar, np.int64))
+
+    def _cat(self, blocks):
+        return {k: np.concatenate([b[k] for b in blocks])
+                for k in blocks[0]}
+
+    def init(self, cores, perm):
+        outs = []
+        for blk in self._blocks(dict(cores=np.asarray(cores),
+                                     perm=np.asarray(perm))):
+            out = self.base._price(blk["cores"], blk["perm"])
+            outs.append((blk, out))
+        states = [_sorted_state(np, pareto_ranks, b["cores"], b["perm"],
+                                o, self.local_pop) for b, o in outs]
+        init_out = dict(
+            times=np.concatenate([o["times"] for _, o in outs]),
+            energies=np.concatenate([o["energies"] for _, o in outs]))
+        return self._cat(states), init_out
+
+    def migrate(self, state):
+        blocks = self._migrate(self._blocks(state))
+        return self._cat(blocks)
+
+    def _migrate(self, blocks):
+        m = self.n_migrants
+        elites = [{k: b[k][:m] for k in b} for b in blocks]
+        incoming = elites[-1:] + elites[:-1]
+        out = []
+        for b, e in zip(blocks, incoming):
+            merged = {k: np.concatenate([e[k], b[k][m:]]) for k in b}
+            out.append(_sorted_state(np, pareto_ranks, merged["cores"],
+                                     merged["perm"], merged,
+                                     self.local_pop))
+        return out
+
+    def step(self, state, keys, n_off: int, migrate: bool = False):
+        keys = np.asarray(jax.device_get(keys))
+        new_blocks, offs = [], []
+        n_quar = 0
+        for i, blk in enumerate(self._blocks(state)):
+            with enable_x64():
+                draws = jax.device_get(generation_draws(
+                    jnp.asarray(keys[i]), n_off=n_off,
+                    n_pop=self.local_pop, n_layers=self.base.n_layers,
+                    n_slots=self.base.n_slots,
+                    tournament_k=self.base.tournament_k))
+            nb, off, st = _generation_step(
+                np, self.base._price, pareto_ranks, self.base.feasible,
+                self.base.n_phys, self.base.explore_prob, blk, draws)
+            new_blocks.append(nb)
+            offs.append(off)
+            n_quar += int(st["n_quarantined"])
+        if migrate:
+            new_blocks = self._migrate(new_blocks)
+        return (self._cat(new_blocks), self._cat(offs),
+                self._stats(new_blocks, n_quar))
+
+
 # ------------------------------------------------------ degradation shell
 
 class _ResilientEngine:
-    """Graceful-degradation shell around the jitted generation engine.
+    """Graceful-degradation shell around a jitted generation engine.
 
     A failed ``init``/``step`` (compile error, device OOM, runtime fault —
-    or an injected one at the ``"device"`` site of a :class:`FaultPlan`)
-    is retried per the :class:`RetryPolicy`; when the retries are
-    exhausted the engine demotes **permanently** to the host NumPy mirror
-    (a failed compile fails again — flapping back is pointless).  The
-    mirror consumes the identical :func:`generation_draws` under the same
-    ``fold_in(key, gen)`` contract, so a mid-run demotion continues the
-    same trajectory to float64 roundoff; a mirror failure propagates."""
+    or an injected one at the engine's :class:`FaultPlan` site,
+    ``"device"`` or ``"sharded"``) is retried per the
+    :class:`RetryPolicy`; when the retries are exhausted the engine
+    demotes **permanently** to its host NumPy mirror (a failed compile
+    fails again — flapping back is pointless).  The mirror consumes the
+    identical :func:`generation_draws` under the same key contract
+    (``fold_in(key, gen)``, or the :func:`island_keys` stack for the
+    sharded engine), so a mid-run demotion continues the same trajectory
+    to float64 roundoff; a mirror failure propagates."""
 
-    def __init__(self, primary: DeviceSearchEngine, mirror_factory, *,
+    def __init__(self, primary, mirror_factory, *,
                  retry: RetryPolicy | None = None,
-                 fault_plan: FaultPlan | None = None):
+                 fault_plan: FaultPlan | None = None,
+                 backend: str = "device"):
         self.engine = primary
         self._mirror_factory = mirror_factory
         self.retry = retry or RetryPolicy()
         self.fault_plan = fault_plan
-        self.backend = "device"
+        self._primary = str(backend)
+        self.backend = self._primary
         self.demotions: list[Demotion] = []
 
     def _run(self, call, site: str):
@@ -490,25 +804,25 @@ class _ResilientEngine:
                     return call(self.engine)
                 except Exception as e:          # SimulatedCrash passes:
                     last = e                    # it is a BaseException
-            if self.backend != "device":
+            if self.backend != self._primary:
                 raise last                      # mirror failed: no net left
-            d = Demotion(site=site, frm="device", to="numpy-mirror",
+            d = Demotion(site=site, frm=self._primary, to="numpy-mirror",
                          error=repr(last), retries=self.retry.max_retries)
             self.demotions.append(d)
-            log.warning("device search engine failed %s after %d retries "
+            log.warning("%s search engine failed %s after %d retries "
                         "(%s); demoting to the host numpy mirror",
-                        site, d.retries, d.error)
+                        self._primary, site, d.retries, d.error)
             self.engine = self._mirror_factory()
             self.backend = "numpy-mirror"
 
     def init(self, cores, perm):
         return self._run(lambda e: e.init(cores, perm), "init")
 
-    def step(self, state, key, n_off: int):
+    def step(self, state, key, *args, **kw):
         def call(e):
-            st = jax.device_get(state) if isinstance(e, _NumpyMirror) \
+            st = jax.device_get(state) if getattr(e, "host_state", False) \
                 else state
-            return e.step(st, key, n_off)
+            return e.step(st, key, *args, **kw)
         return self._run(call, "step")
 
 
@@ -610,11 +924,8 @@ def evolutionary_search_device(
 
     if restored is not None:
         arrays, gen0, meta = restored
-        if meta.get("engine") != "device":
-            raise ValueError(
-                f"checkpoint in {checkpoint_dir!r} was written by the "
-                f"{meta.get('engine')!r} engine; resume it with "
-                f"engine={meta.get('engine')!r}")
+        validate_resume_meta(meta, engine="device",
+                             checkpoint_dir=checkpoint_dir)
         state = {k: np.asarray(arrays[k]) for k in _STATE_KEYS}
         archive.load_state(arrays)
         history = [GenStats(**h) for h in meta["history"]]
@@ -724,3 +1035,247 @@ def _charge(evaluator, n: int) -> None:
     evaluators without a counter are left alone."""
     if hasattr(evaluator, "n_evals"):
         evaluator.n_evals += int(n)
+
+
+def evolutionary_search_sharded(
+    net,
+    profile,
+    evaluator,
+    *,
+    population_size: int = 24,
+    generations: int = 16,
+    tournament_k: int = 3,
+    explore_prob: float = 0.25,
+    seed: int = 0,
+    max_evaluations: int | None = None,
+    seed_candidates=None,
+    greedy=None,
+    pareto_eps: float = 0.01,
+    n_islands: int | None = None,
+    migrate_every: int = 5,
+    n_migrants: int | None = None,
+    mesh=None,
+    reference: bool = False,
+    checkpoint_dir: str | None = None,
+    checkpoint_every: int = 1,
+    checkpoint_keep: int = 3,
+    resume: bool = False,
+    fault_plan: FaultPlan | None = None,
+    retry: RetryPolicy | None = None,
+) -> SearchResult:
+    """Run the island-model sharded search (the ``engine="sharded"`` path
+    of :func:`repro.core.search.evolutionary_search`).
+
+    The population is split into ``n_islands`` equal islands (default: one
+    per visible device; ``population_size`` must divide evenly and leave
+    at least 2 rows per island), the K axis is sharded over the 1-D
+    ``("island",)`` mesh, and every device runs the jitted device-engine
+    generation on its own island.  Every ``migrate_every`` generations
+    (0 disables) each island's top ``n_migrants`` rows (default
+    ``local_pop // 8``, at least 1) rotate one island around the ring.
+    Randomness follows :func:`island_keys`; with ``n_islands=1`` the run
+    is bit-identical to :func:`evolutionary_search_device`.
+
+    Checkpointing reuses the device engine's self-contained ``.npz``
+    layout — island state is gathered to host in island-block order, and
+    resume validates the island geometry via
+    :func:`~repro.core.resilience.validate_resume_meta` (a checkpoint is
+    only bit-identical under the configuration that wrote it).
+    ``reference=True`` swaps the jitted program for
+    :class:`_ShardedHostMirror`; a failed jitted call demotes to the same
+    mirror through :class:`_ResilientEngine` (``fail={"sharded": n}`` of a
+    :class:`FaultPlan` injects such failures).  See
+    ``docs/distributed.md``.
+    """
+    for attr in ("net", "xs", "profile"):
+        if not hasattr(evaluator, attr):
+            raise TypeError(
+                "engine='sharded' needs a SimEvaluator-like evaluator "
+                f"(missing .{attr}); plain callables can only drive the "
+                "numpy engine")
+    _validate_search_args(net, profile, population_size=population_size,
+                          generations=generations,
+                          seed_candidates=seed_candidates)
+    if mesh is None:
+        from repro.distributed.sharding import island_mesh
+        mesh = island_mesh(n_islands)
+    if "island" not in mesh.axis_names:
+        raise ValueError(f"engine='sharded' needs a 1-D ('island',) mesh, "
+                         f"got axes {mesh.axis_names}")
+    n_islands = int(mesh.shape["island"])
+    if population_size % n_islands:
+        raise ValueError(
+            f"population_size={population_size} does not divide evenly "
+            f"over {n_islands} islands — pick a multiple of {n_islands} "
+            "or pass n_islands explicitly")
+    local_pop = population_size // n_islands
+    if local_pop < 2:
+        raise ValueError(
+            f"population_size={population_size} over {n_islands} islands "
+            f"leaves {local_pop} row(s) per island; tournament selection "
+            "needs at least 2 — lower n_islands or grow the population")
+    migrate_every = int(migrate_every)
+    if n_migrants is None:
+        n_migrants = max(1, local_pop // 8)
+    n_migrants = int(n_migrants)
+    if not 1 <= n_migrants <= local_pop:
+        raise ValueError(f"n_migrants={n_migrants} must be in "
+                         f"[1, {local_pop}] (the island size)")
+
+    xs = evaluator.xs
+    cache = getattr(evaluator, "cache", None) \
+        or precompute_pricing(net, xs, profile)
+
+    ckpt = (SearchCheckpointer(checkpoint_dir, every=checkpoint_every,
+                               keep=checkpoint_keep)
+            if checkpoint_dir else None)
+    restored = ckpt.restore() if (ckpt is not None and resume) else None
+
+    tables = move_tables(net, profile)
+    n_layers = len(cache.layers)
+    n_slots = int(profile.n_cores)
+
+    def _mirror():
+        return _ShardedHostMirror(net, xs, profile, cache, tables,
+                                  n_islands=n_islands, local_pop=local_pop,
+                                  n_migrants=n_migrants,
+                                  explore_prob=explore_prob,
+                                  tournament_k=tournament_k,
+                                  fault_plan=fault_plan)
+
+    if reference:
+        engine = _mirror()
+    else:
+        engine = _ResilientEngine(
+            _sharded_engine_for(net, profile, cache, tables, mesh=mesh,
+                                local_pop=local_pop, n_migrants=n_migrants,
+                                explore_prob=explore_prob,
+                                tournament_k=tournament_k),
+            _mirror, retry=retry, fault_plan=fault_plan, backend="sharded")
+    base_key = jax.random.PRNGKey(seed)
+    archive = EpsParetoArchive(pareto_eps)
+
+    if restored is not None:
+        arrays, gen0, meta = restored
+        validate_resume_meta(meta, engine="sharded",
+                             checkpoint_dir=checkpoint_dir,
+                             expect=dict(population_size=population_size,
+                                         n_islands=n_islands,
+                                         migrate_every=migrate_every,
+                                         n_migrants=n_migrants))
+        state = {k: np.asarray(arrays[k]) for k in _STATE_KEYS}
+        archive.load_state(arrays)
+        history = [GenStats(**h) for h in meta["history"]]
+        evals_used = int(meta["evals_used"])
+        seed_best_time = float(meta["seed_best_time"])
+        start_gen = gen0 + 1
+    else:
+        rng = np.random.default_rng(seed)
+        cands = list(seed_candidates if seed_candidates is not None else
+                     seeded_population(net, profile, size=population_size,
+                                       rng=rng, greedy=greedy))
+        if not cands:
+            raise ValueError("empty initial population")
+        if len(cands) != population_size:
+            raise ValueError(
+                f"{len(cands)} seed candidates do not fill "
+                f"population_size={population_size} (the sharded engine "
+                "needs full equal islands)")
+        pop = Population.from_candidates(cands)
+
+        state, init_out = engine.init(pop.cores, pop.perm)
+        evals_used = len(pop)
+        _charge(evaluator, len(pop))
+        init_host = jax.device_get(init_out)
+        it, ie, _ = quarantine_rows(
+            np, np.asarray(init_host["times"], np.float64),
+            np.asarray(init_host["energies"], np.float64))
+        seed_best_time = float(np.min(it))
+        archive.update_batch(it, ie, pop.cores, pop.perm)
+
+        # gen-0 stats on host, with the same ops as the device driver at
+        # one island (bit parity); islands contribute their sorted leaders
+        first = jax.device_get({k: state[k] for k in ("times", "energies")})
+        ft = np.asarray(first["times"]).reshape(n_islands, local_pop)
+        fe = np.asarray(first["energies"]).reshape(n_islands, local_pop)
+        tmin = float(np.min(ft[:, 0]))
+        emin = float(np.min(np.where(ft[:, 0] == tmin, fe[:, 0], np.inf)))
+        history = [GenStats(generation=0,
+                            best_time=tmin,
+                            best_energy=emin,
+                            mean_time=float(finite_mean(
+                                np, np.asarray(first["times"]))),
+                            n_evals=evals_used,
+                            front_size=len(archive))]
+        start_gen = 1
+
+    def _snapshot(gen: int) -> None:
+        host_state = jax.device_get(state)
+        arrays = {k: np.asarray(host_state[k]) for k in _STATE_KEYS}
+        arrays.update(archive.state_arrays(n_layers, n_slots))
+        meta = dict(engine="sharded", population_size=int(population_size),
+                    n_islands=int(n_islands),
+                    migrate_every=int(migrate_every),
+                    n_migrants=int(n_migrants),
+                    evals_used=int(evals_used),
+                    seed_best_time=float(seed_best_time),
+                    history=[dataclasses.asdict(g) for g in history])
+        ckpt.save(gen, arrays, meta)
+
+    if restored is None:
+        if ckpt is not None:
+            _snapshot(0)
+        if fault_plan is not None:
+            fault_plan.after_generation(0)
+
+    for gen in range(start_gen, generations + 1):
+        n_off_total = population_size
+        if max_evaluations is not None:
+            n_off_total = min(n_off_total, max_evaluations - evals_used)
+        local_off = n_off_total // n_islands
+        if local_off <= 0:
+            break
+        migrate = (n_islands > 1 and migrate_every > 0
+                   and gen % migrate_every == 0)
+        keys = island_keys(base_key, gen, n_islands)
+        state, off, stats = engine.step(state, keys, n_off=local_off,
+                                        migrate=migrate)
+        evals_used += local_off * n_islands
+        _charge(evaluator, local_off * n_islands)
+        host = jax.device_get(dict(off=off, stats=stats))
+        off_h, stats_h = host["off"], host["stats"]
+        archive.update_batch(off_h["times"], off_h["energies"],
+                             off_h["cores"], off_h["perm"])
+        history.append(GenStats(
+            generation=gen,
+            best_time=float(np.asarray(stats_h["best_time"])[0]),
+            best_energy=float(np.asarray(stats_h["best_energy"])[0]),
+            mean_time=float(np.asarray(stats_h["mean_time"])[0]),
+            n_evals=evals_used,
+            front_size=len(archive),
+            n_quarantined=int(np.asarray(stats_h["n_quarantined"])[0])))
+        if ckpt is not None and ckpt.due(gen, generations):
+            _snapshot(gen)
+        if fault_plan is not None:
+            fault_plan.after_generation(gen)
+
+    final = jax.device_get({k: state[k] for k in
+                            ("cores", "perm", "times", "energies")})
+    ft = np.asarray(final["times"]).reshape(n_islands, local_pop)
+    fe = np.asarray(final["energies"]).reshape(n_islands, local_pop)
+    t0 = ft[:, 0]
+    best_i = int(np.argmin(np.where(t0 == t0.min(), fe[:, 0], np.inf)))
+    row = best_i * local_pop
+    best = Candidate(tuple(int(x) for x in np.asarray(final["cores"])[row]),
+                     tuple(int(x) for x in np.asarray(final["perm"])[row]))
+    part, mapping = decode(best)
+    best_report = price_candidate(net, profile, cache, part, mapping)
+    front, _ = archive.front()
+    front_reports = simulate_population(net, xs, profile,
+                                        [decode(c) for c in front],
+                                        cache=cache) if front else []
+    return SearchResult(candidate=best, partition=part, mapping=mapping,
+                        report=best_report, history=history,
+                        n_evals=evals_used, seed_best_time=seed_best_time,
+                        front=front, front_reports=front_reports,
+                        demotions=list(getattr(engine, "demotions", ())))

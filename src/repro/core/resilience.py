@@ -25,10 +25,19 @@ primitives fix that, shared by both generation engines
   survival deterministically; finite rows keep their exact values and
   relative order.
 * :class:`FaultPlan` — the deterministic fault-injection harness: scripted
-  exception throws per backend site, scripted NaN pricing rows, and a
-  simulated kill after generation ``g`` (:class:`SimulatedCrash`), raised
-  only after the generation's checkpoint landed — the crash model the
-  resume tests replay.
+  exception throws per backend site (``"device"`` / ``"vmap"`` /
+  ``"numpy"`` for pricing, ``"device"`` / ``"sharded"`` for the jitted
+  generation engines), scripted NaN pricing rows, and a simulated kill
+  after generation ``g`` (:class:`SimulatedCrash`), raised only after the
+  generation's checkpoint landed — the crash model the resume tests replay.
+
+All three generation engines (numpy / device / sharded) write the same
+self-contained snapshot layout and validate it on resume through
+:func:`validate_resume_meta`: the engine tag must match, and any
+engine-specific run configuration recorded in the meta (the sharded
+engine's ``n_islands`` / ``migrate_every`` / ``n_migrants`` — resuming on
+a different mesh would silently change the PRNG contract and the
+migration ring) must match the resuming run's settings.
 """
 
 from __future__ import annotations
@@ -229,6 +238,32 @@ def finite_mean(xp, values):
     total = xp.where(ok, values, 0.0).sum()
     return xp.where(n > 0, total / xp.maximum(n, 1),
                     xp.asarray(QUARANTINE_SENTINEL, dtype=values.dtype))
+
+
+def validate_resume_meta(meta: dict, *, engine: str,
+                         checkpoint_dir: str | None,
+                         expect: dict | None = None) -> None:
+    """Shared engine-tag + run-config validation for checkpoint resume.
+
+    ``engine`` is the resuming engine's tag; ``expect`` maps meta keys to
+    the values the resuming run was configured with.  Mismatches raise
+    ``ValueError`` with an actionable message instead of continuing a
+    trajectory that could silently diverge (a checkpoint is only
+    bit-identical under the exact engine + configuration that wrote it).
+    """
+    got = meta.get("engine")
+    if got != engine:
+        raise ValueError(
+            f"checkpoint in {checkpoint_dir!r} was written by the "
+            f"{got!r} engine; resume it with engine={got!r}")
+    for key, want in (expect or {}).items():
+        have = meta.get(key)
+        if have != want:
+            raise ValueError(
+                f"checkpoint in {checkpoint_dir!r} was written with "
+                f"{key}={have!r} but this run uses {key}={want!r}; resume "
+                "with the checkpoint's settings (or start a fresh run "
+                "without resume=True)")
 
 
 # ------------------------------------------------- serialization utilities

@@ -67,7 +67,8 @@ from repro.core.partitioner import (Evaluator, OptimizationResult,
 from repro.core.resilience import (FaultPlan, SearchCheckpointer,
                                    decode_bytes_set, encode_bytes_set,
                                    finite_mean, quarantine_rows,
-                                   rng_from_state, rng_state)
+                                   rng_from_state, rng_state,
+                                   validate_resume_meta)
 from repro.neuromorphic.network import SimNetwork
 from repro.neuromorphic.noc import (Mapping, ordered_mapping, random_mapping,
                                     strided_mapping)
@@ -668,6 +669,9 @@ def evolutionary_search(
     greedy: OptimizationResult | None = None,
     pareto_eps: float = 0.01,
     engine: str = "numpy",
+    n_islands: int | None = None,
+    migrate_every: int = 5,
+    n_migrants: int | None = None,
     checkpoint_dir: str | None = None,
     checkpoint_every: int = 1,
     checkpoint_keep: int = 3,
@@ -697,7 +701,15 @@ def evolutionary_search(
     engine needs a :class:`~repro.core.partitioner.SimEvaluator`-like
     evaluator and follows its own PRNG-key contract (``docs/search.md``);
     the two engines are deterministic per seed but not sample-for-sample
-    identical to each other.
+    identical to each other.  ``"sharded"`` scales the device engine's
+    jitted generation across every visible device as an island model
+    (``docs/distributed.md``): the population splits into ``n_islands``
+    equal islands (default one per device; must divide
+    ``population_size``), elites rotate one island around a ring every
+    ``migrate_every`` generations (``n_migrants`` rows, default an eighth
+    of the island), and with a single island it reproduces
+    ``engine="device"`` bit-identically.  The island keywords are only
+    meaningful for ``engine="sharded"``.
 
     Fault tolerance (``docs/robustness.md``): with ``checkpoint_dir`` the
     search writes an atomic, self-contained snapshot every
@@ -724,6 +736,20 @@ def evolutionary_search(
             checkpoint_every=checkpoint_every,
             checkpoint_keep=checkpoint_keep, resume=resume,
             fault_plan=fault_plan)
+    if engine == "sharded":
+        from repro.core.device_search import evolutionary_search_sharded
+        return evolutionary_search_sharded(
+            net, profile, evaluator, population_size=population_size,
+            generations=generations, tournament_k=tournament_k,
+            explore_prob=explore_prob, seed=seed,
+            max_evaluations=max_evaluations,
+            seed_candidates=seed_candidates, greedy=greedy,
+            pareto_eps=pareto_eps, n_islands=n_islands,
+            migrate_every=migrate_every, n_migrants=n_migrants,
+            checkpoint_dir=checkpoint_dir,
+            checkpoint_every=checkpoint_every,
+            checkpoint_keep=checkpoint_keep, resume=resume,
+            fault_plan=fault_plan)
     if engine != "numpy":
         raise ValueError(f"unknown search engine {engine!r}")
     ckpt = (SearchCheckpointer(checkpoint_dir, every=checkpoint_every,
@@ -740,11 +766,8 @@ def evolutionary_search(
 
     if restored is not None:
         arrays, gen0, meta = restored
-        if meta.get("engine") != "numpy":
-            raise ValueError(
-                f"checkpoint in {checkpoint_dir!r} was written by the "
-                f"{meta.get('engine')!r} engine; resume it with "
-                f"engine={meta.get('engine')!r}")
+        validate_resume_meta(meta, engine="numpy",
+                             checkpoint_dir=checkpoint_dir)
         rng = rng_from_state(meta["rng_state"])
         pop = Population(arrays["cores"], arrays["perm"])
         times = np.asarray(arrays["times"], np.float64)

@@ -1,5 +1,19 @@
-"""Distributed-optimization collectives: int8-compressed gradient
-all-reduce with error feedback.
+"""Distributed collectives: island-migration primitives for the sharded
+search plus the int8-compressed gradient all-reduce with error feedback.
+
+**Island migration** (``engine="sharded"`` in ``repro.core.search``): the
+population's K axis is sharded over a 1-D ``("island",)`` mesh, and every
+``migrate_every`` generations each island rotates its elite block to the
+next island on a ring — :func:`ring_shift` is that ``jax.lax.ppermute``,
+applied leaf-wise to the whole survivor-state pytree so genomes travel with
+their cached objectives.  A ring *rotation* (not a copy) preserves the
+global genome multiset exactly: every row changes island, no row is
+duplicated or dropped (tests/test_sharded_search.py asserts the multiset).
+:func:`gather_islands` is the matching ``all_gather`` used to assemble
+global Pareto/GenStats values inside the sharded step.
+
+**Compressed gradient reduction** (original module contents):
+int8-compressed gradient all-reduce with error feedback.
 
 The DP gradient reduction moves |params| bytes per step across the `data`
 (and `pod` / DCI) links — at 1T params that IS the collective term.  The
@@ -24,6 +38,33 @@ import functools
 
 import jax
 import jax.numpy as jnp
+
+
+def ring_shift(tree, *, size: int, axis_name: str = "island",
+               shift: int = 1):
+    """Rotate every leaf's shard ``shift`` positions around the mesh ring:
+    island ``i`` sends its block to island ``(i + shift) % size`` and
+    receives island ``(i - shift) % size``'s.  ``size`` is the static mesh
+    axis size (``ppermute`` permutations must be python data — a traced
+    ``axis_size`` cannot build them, see ``distributed.compat``).  Only
+    valid inside a ``shard_map`` over ``axis_name``."""
+    size = int(size)
+    if size < 1:
+        raise ValueError(f"ring over {size} islands")
+    perm = [(i, (i + shift) % size) for i in range(size)]
+    return jax.tree.map(
+        lambda v: jax.lax.ppermute(v, axis_name, perm), tree)
+
+
+def gather_islands(tree, *, axis_name: str = "island", axis: int = 0,
+                   tiled: bool = False):
+    """Leaf-wise ``jax.lax.all_gather`` over the island axis: every island
+    ends up holding the stacked (``tiled=False``, new leading axis) or
+    concatenated (``tiled=True``) per-island values — the assembly step for
+    global fronts/stats inside the sharded search."""
+    return jax.tree.map(
+        lambda v: jax.lax.all_gather(v, axis_name, axis=axis, tiled=tiled),
+        tree)
 
 
 def quantize_int8(x: jax.Array):

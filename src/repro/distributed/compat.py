@@ -4,11 +4,15 @@ The codebase targets the jax >= 0.6 public API (``jax.shard_map`` with a
 ``check_vma`` argument); older runtimes only have
 ``jax.experimental.shard_map.shard_map`` whose equivalent flag is named
 ``check_rep``.  Import ``shard_map`` from here instead of from ``jax``.
+Same story for mesh construction (``jax.make_mesh`` vs hand-reshaping
+devices into ``jax.sharding.Mesh``) and for axis sizes inside collectives
+(``jax.lax.axis_size`` vs the ``psum(1)`` fallback).
 """
 
 from __future__ import annotations
 
 import inspect
+import math
 
 import jax
 
@@ -31,7 +35,26 @@ def shard_map(f, **kw):
 
 
 def axis_size(axis_name):
-    """``jax.lax.axis_size`` with a psum(1) fallback for older runtimes."""
+    """``jax.lax.axis_size`` with a psum(1) fallback for older runtimes.
+
+    NOTE: the fallback is a *traced* value — collectives whose permutation
+    must be static python data (``ppermute`` rings) cannot use it; pass the
+    mesh axis size explicitly instead (see
+    :func:`repro.distributed.collectives.ring_shift`)."""
     if hasattr(jax.lax, "axis_size"):
         return jax.lax.axis_size(axis_name)
     return jax.lax.psum(1, axis_name)
+
+
+def make_mesh(shape, axis_names, *, devices=None):
+    """``jax.make_mesh`` with a ``jax.sharding.Mesh`` fallback for runtimes
+    predating it.  ``devices`` defaults to the first ``prod(shape)`` local
+    devices; too few visible devices raise the usual jax error."""
+    if hasattr(jax, "make_mesh"):
+        kw = {} if devices is None else {"devices": devices}
+        return jax.make_mesh(tuple(shape), tuple(axis_names), **kw)
+    import numpy as np                          # pragma: no cover - old jax
+    n = math.prod(shape)
+    devs = list(devices) if devices is not None else jax.devices()[:n]
+    return jax.sharding.Mesh(np.asarray(devs).reshape(shape),
+                             tuple(axis_names))

@@ -34,6 +34,29 @@ from repro.models.encdec import EncDecCfg
 from repro.models.layers import ShardCtx
 
 
+def island_mesh(n_islands: int | None = None, *, devices=None):
+    """1-D ``("island",)`` mesh for the sharded evolutionary search.
+
+    The search population's K axis is sharded over this single axis: each
+    device holds one island's subpopulation (``docs/distributed.md``).
+    ``n_islands`` defaults to every visible device; on CPU, more than one
+    device requires ``--xla_force_host_platform_device_count`` to be set
+    *before* jax initializes (``benchmarks.run --devices N`` or
+    :func:`repro.launch.mesh.force_host_device_count`)."""
+    devs = list(devices) if devices is not None else jax.devices()
+    n = len(devs) if n_islands is None else int(n_islands)
+    if n < 1:
+        raise ValueError(f"island mesh needs at least 1 device, got {n}")
+    if n > len(devs):
+        raise RuntimeError(
+            f"island mesh needs {n} devices but only {len(devs)} are "
+            "visible — on CPU launch via `python -m benchmarks.run "
+            f"--devices {n}` (or set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n} before python imports jax)")
+    from repro.distributed.compat import make_mesh
+    return make_mesh((n,), ("island",), devices=devs[:n])
+
+
 def make_ctx(mesh, *, batch_size: int | None = None) -> ShardCtx:
     """ShardCtx from a production mesh (axis names decide dp)."""
     if mesh is None:

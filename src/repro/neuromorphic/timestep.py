@@ -428,6 +428,11 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
       parity as ``vmap``; this is the pricer the device-resident search
       engine (``repro.core.search``, ``engine="device"``) keeps entirely
       on the accelerator.
+    * ``backend="sharded"`` — the device path with the K axis sharded over
+      a 1-D ``("island",)`` device mesh (:func:`price_population_sharded`;
+      every visible device prices its own block of rows).  Per-row parity
+      with ``"device"`` to float64 roundoff; useful past pop ≈ 4k on a
+      multi-device host (``docs/distributed.md``).
     """
     cands = list(candidates)
     if not cands:
@@ -448,6 +453,10 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
         cores, perm = _pairs_to_rows(cands, len(cache.layers),
                                      profile.n_cores)
         return price_population_device(net, profile, cache, cores, perm)
+    if backend == "sharded":
+        cores, perm = _pairs_to_rows(cands, len(cache.layers),
+                                     profile.n_cores)
+        return price_population_sharded(net, profile, cache, cores, perm)
     if backend != "numpy":
         raise ValueError(f"unknown population backend {backend!r}")
     n_layers = len(cache.layers)
@@ -1047,6 +1056,64 @@ def price_population_device(net: SimNetwork, profile: ChipProfile,
             f"cores {np.shape(cores)} and perm {np.shape(perm)}")
     out = pricer.price(cores, perm)
     n_logical = np.asarray(jax.device_get(cores), np.int64).sum(axis=1)
+    return _assemble_reports(out, n_logical, cache,
+                             pricer.base.weight_density)
+
+
+def price_population_sharded(net: SimNetwork, profile: ChipProfile,
+                             cache: PricingCache, cores, perm, *,
+                             mesh=None) -> list[SimReport]:
+    """Mesh-aware population pricing: the K axis sharded over a 1-D
+    ``("island",)`` device mesh.
+
+    Each device prices its own block of genome rows with the same traced
+    :meth:`DevicePopulationPricer.price_row` program the single-device
+    backend vmaps, inside one ``shard_map``; per-row outputs are therefore
+    within float64 roundoff of ``backend="device"`` (pricing is row-
+    independent).  ``mesh`` defaults to
+    :func:`repro.distributed.sharding.island_mesh` over every visible
+    device; K is padded up to a multiple of the island count with copies
+    of row 0 and the padding is dropped from the returned reports.
+
+    This is the report-producing wrapper; the sharded evolutionary search
+    (``engine="sharded"``) composes ``price_row`` directly into its own
+    per-island generation step instead (``repro.core.device_search``).
+    """
+    from jax.sharding import PartitionSpec
+    from repro.distributed.compat import shard_map
+    pricer = device_pricer(net, profile, cache)
+    n_layers, n_slots = len(cache.layers), int(profile.n_cores)
+    if (np.ndim(cores) != 2 or np.ndim(perm) != 2
+            or cores.shape[1] != n_layers or perm.shape[1] != n_slots
+            or cores.shape[0] != perm.shape[0]):
+        raise ValueError(
+            f"genome rows must be cores (K, {n_layers}) and perm "
+            f"(K, {n_slots}) for this (network, profile); got "
+            f"cores {np.shape(cores)} and perm {np.shape(perm)}")
+    if mesh is None:
+        from repro.distributed.sharding import island_mesh
+        mesh = island_mesh()
+    n_islands = int(mesh.shape["island"])
+    K = int(np.shape(cores)[0])
+    pad = (-K) % n_islands
+    cores_h = np.asarray(jax.device_get(cores), np.int32)
+    perm_h = np.asarray(jax.device_get(perm), np.int32)
+    if pad:
+        cores_h = np.concatenate([cores_h, np.repeat(cores_h[:1], pad, 0)])
+        perm_h = np.concatenate([perm_h, np.repeat(perm_h[:1], pad, 0)])
+    fns = pricer.__dict__.setdefault("_sharded_price_fns", {})
+    mesh_key = (n_islands, tuple(d.id for d in mesh.devices.flat))
+    if mesh_key not in fns:
+        spec = PartitionSpec("island")
+        fns[mesh_key] = jax.jit(shard_map(
+            jax.vmap(pricer.price_row), mesh=mesh,
+            in_specs=(spec, spec), out_specs=spec, check_vma=False))
+    with enable_x64():
+        out = jax.device_get(fns[mesh_key](jnp.asarray(cores_h),
+                                           jnp.asarray(perm_h)))
+    if pad:
+        out = {k: v[:K] for k, v in out.items()}
+    n_logical = cores_h[:K].astype(np.int64).sum(axis=1)
     return _assemble_reports(out, n_logical, cache,
                              pricer.base.weight_density)
 

@@ -7,6 +7,12 @@ crash mid-save) is never restored; a crash *between* the npz replace and
 the ``meta.json`` replace still restores the newest complete snapshot
 without pairing its arrays with the stale meta; ``keep``-pruning retains
 exactly the newest ``keep`` steps whatever the save order.
+
+Plus the sharded-engine extension: the island-model search gathers its
+per-island device state to host and writes the SAME self-contained
+``step_<gen>.npz`` layout (island-block row order), kill-and-resume is
+bit-identical, and resume validates the island geometry recorded in the
+snapshot meta.
 """
 
 import json
@@ -184,3 +190,96 @@ class TestSerializationHelpers:
         state["bit_generator"] = "MT19937"
         with pytest.raises(ValueError, match="MT19937"):
             rng_from_state(state)
+
+
+class TestShardedSearchCheckpoint:
+    """The sharded engine's snapshots reuse the device-engine layout:
+    island state gathered to host (island-block row order), archive and
+    history embedded, geometry recorded in the meta."""
+
+    @staticmethod
+    def _workload():
+        from repro.core.partitioner import SimEvaluator
+        from repro.neuromorphic import (loihi2_like, make_inputs,
+                                        programmed_fc_network)
+        if "value" not in _SHARDED_WL:
+            net = programmed_fc_network(
+                [48, 64, 32], weight_densities=[0.6, 0.6],
+                act_densities=[0.3, 0.3], seed=0, weight_format="sparse")
+            xs = make_inputs(48, 0.3, 2, seed=1)
+            prof = loihi2_like()
+            _SHARDED_WL["value"] = (net, xs, prof,
+                                    SimEvaluator(net, xs, prof))
+        return _SHARDED_WL["value"]
+
+    def _run(self, d=None, resume=False, fault_plan=None, **kw):
+        from repro.core.partitioner import SimEvaluator
+        from repro.core.search import evolutionary_search
+        net, xs, prof, ev = self._workload()
+        args = dict(population_size=16, generations=4, seed=3,
+                    engine="sharded", migrate_every=2)
+        args.update(kw)
+        return evolutionary_search(
+            net, prof, SimEvaluator(net, xs, prof, cache=ev.cache),
+            checkpoint_dir=d, resume=resume, fault_plan=fault_plan, **args)
+
+    def test_kill_and_resume_is_bit_identical(self, tmp_path):
+        """Kill after generation 2 of 4 (snapshot on disk), resume: the
+        trajectory, front and final candidate equal the uninterrupted
+        run's EXACTLY (each generation is a pure function of the island
+        keys and the gathered state)."""
+        from repro.core.resilience import FaultPlan, SimulatedCrash
+        full = self._run()
+        d = str(tmp_path / "ck")
+        with pytest.raises(SimulatedCrash):
+            self._run(d=d, fault_plan=FaultPlan(kill_after_gen=2))
+        res = self._run(d=d, resume=True)
+        assert [(g.generation, g.best_time, g.best_energy, g.mean_time,
+                 g.n_evals, g.front_size) for g in res.history] \
+            == [(g.generation, g.best_time, g.best_energy, g.mean_time,
+                 g.n_evals, g.front_size) for g in full.history]
+        assert res.front == full.front
+        assert res.candidate == full.candidate
+
+    @quick
+    def test_snapshot_layout_is_shared_and_self_contained(self, tmp_path):
+        """Sharded snapshots are ordinary step_<gen>.npz files: restorable
+        by the bare SearchCheckpointer without the sidecar meta.json, with
+        the gathered global state shapes and the island geometry in the
+        embedded meta."""
+        import jax
+        net, xs, prof, ev = self._workload()
+        d = str(tmp_path / "ck")
+        self._run(d=d, generations=2)
+        assert sorted(f for f in os.listdir(d) if f.endswith(".npz")) \
+            == [f"step_{g:08d}.npz" for g in range(3)]
+        os.remove(os.path.join(d, "meta.json"))
+        arrays, gen, meta = SearchCheckpointer(d).restore()
+        assert gen == 2
+        assert meta["engine"] == "sharded"
+        assert meta["n_islands"] == len(jax.devices())
+        assert meta["migrate_every"] == 2
+        assert arrays["cores"].shape == (16, len(net.layers))
+        assert arrays["times"].shape == (16,)
+
+    @quick
+    def test_resume_rejects_geometry_mismatch(self, tmp_path):
+        """A snapshot records (n_islands, migrate_every, n_migrants); a
+        resume configured differently would silently change the trajectory
+        — loud error instead."""
+        d = str(tmp_path / "ck")
+        self._run(d=d, generations=2)
+        with pytest.raises(ValueError, match="migrate_every"):
+            self._run(d=d, resume=True, migrate_every=3)
+
+    @quick
+    def test_resume_rejects_engine_mismatch(self, tmp_path):
+        """A device-engine snapshot must not seed a sharded resume (and
+        vice versa) even though the array layout matches at one island."""
+        d = str(tmp_path / "ck")
+        self._run(d=d, generations=2, engine="device")
+        with pytest.raises(ValueError, match="'device'"):
+            self._run(d=d, resume=True)
+
+
+_SHARDED_WL: dict = {}
