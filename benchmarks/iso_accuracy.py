@@ -1,0 +1,170 @@
+"""Iso-accuracy loop (paper §VII headline, closed end-to-end): floorline-
+guided sparsity-aware training -> trained sparsity profile -> evolutionary
+mapping search -> accuracy-vs-time/energy front.
+
+This arm is the tentpole wiring: a dense baseline is trained first, the
+floorline model prices its deployment and weights the per-layer
+regularizers (:meth:`SparseTrainer.floorline_weights`), then the guided
+recipes (Tl1 activation regularization, one-shot magnitude prune + masked
+fine-tune) are trained and each trained network is fed through the
+evolutionary mapping search.  Every config lands on a (accuracy, knee
+time, knee energy) row; the headline check is the paper's: the best
+trained-sparsity config must beat the dense baseline's knee time at
+matched accuracy (within 1%).
+
+The best config's :class:`~repro.sparsity.profile.SparsityProfile` is then
+injected into a compiled model-zoo arch (``compile_network(act_density=
+profile)``), replacing the synthetic density schedules of
+``benchmarks/act_schedules.py`` with measured, trained densities.
+
+Appends an ``iso_accuracy`` section to ``BENCH_search.json`` (other
+sections survive, :func:`benchmarks._bench_io.merge_write_json`).
+"""
+
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks import workloads as W
+from benchmarks._bench_io import merge_write_json
+from repro.core.partitioner import SimEvaluator
+from repro.core.search import evolutionary_search
+from repro.neuromorphic.platform import loihi2_like
+from repro.neuromorphic.timestep import simulate
+from repro.train import SparseTrainConfig, SparseTrainer
+
+BENCH_PATH = "BENCH_search.json"
+
+SIZES = (128, 192, 128, 10)          # images task: sizes[0] = 2*8^2
+ACC_TOL = 0.01                       # "matched accuracy" band (paper: iso)
+
+
+def _smoke() -> bool:
+    return os.environ.get("REPRO_BENCH_SMOKE") == "1"
+
+
+def _probe_xs(trainer: SparseTrainer, steps: int) -> np.ndarray:
+    """Shared held-out input stream (every config prices the same data)."""
+    b = trainer.data.batch(10_999)
+    x = b["x"].reshape(len(b["y"]), -1)[:steps]
+    return np.maximum(np.asarray(x, np.float32), 0.0)
+
+
+def _search_knee(net, xs, chip, *, pop: int, gens: int):
+    """Knee-point (time, energy) of a short evolutionary mapping search."""
+    ev = SimEvaluator(net, xs, chip)
+    res = evolutionary_search(net, chip, ev, population_size=pop,
+                              generations=gens, seed=0)
+    knee = res.knee()
+    rep = knee[1] if knee is not None else res.report
+    return (float(rep.time_per_step), float(rep.energy_per_step),
+            int(res.n_evals))
+
+
+def run(quick: bool = False) -> dict:
+    smoke = _smoke()
+    steps = 40 if smoke else (80 if quick else 200)
+    ft = 15 if smoke else (30 if quick else 60)
+    pop = 10 if smoke else (12 if quick else 20)
+    gens = 3 if smoke else (5 if quick else 10)
+    T = 4 if smoke else 8
+    lams = [0.05] if smoke else [0.02, 0.05, 0.15]
+    chip = loihi2_like()
+
+    # 1. dense baseline + floorline guidance read off its deployment
+    base = SparseTrainer(
+        SparseTrainConfig(sizes=SIZES, steps=steps, seed=0)).train()
+    guide = base.floorline_weights(chip, probe_steps=T)
+
+    # 2. guided sparsity recipes (§VII-A): Tl1 sweep + prune/fine-tune
+    trainers = [("dense", base)]
+    for lam in lams:
+        cfg = SparseTrainConfig(sizes=SIZES, steps=steps, lam=lam,
+                                reg="tl1", seed=0)
+        trainers.append((f"tl1[{lam}]",
+                         SparseTrainer(cfg, layer_weights=guide).train()))
+    cfg = SparseTrainConfig(sizes=SIZES, steps=steps, lam=lams[0],
+                            reg="tl1", prune_sparsity=0.5,
+                            finetune_steps=ft, seed=0)
+    trainers.append((f"tl1[{lams[0]}]+prune0.5",
+                     SparseTrainer(cfg, layer_weights=guide).train()))
+
+    # 3. every trained network through the mapping search -> front rows
+    xs = _probe_xs(base, T)
+    rows = []
+    profiles = {}
+    for name, tr in trainers:
+        met = tr.eval_metrics()
+        profile = tr.extract_profile(meta={"config": name})
+        profiles[name] = profile
+        t, e, n_evals = _search_knee(tr.deploy(), xs, chip,
+                                     pop=pop, gens=gens)
+        rows.append({
+            "config": name, "baseline": name == "dense",
+            "acc": met["acc"], "act_density": met["act_density"],
+            "weight_density": float(np.mean(profile.weight_density)),
+            "time": t, "energy": e, "n_evals": n_evals,
+            "profile_act_density": [float(d) for d in profile.act_density],
+        })
+
+    # 4. the paper's iso-accuracy verdict
+    base_row = rows[0]
+    ok = [r for r in rows if not r["baseline"]
+          and r["acc"] >= base_row["acc"] - ACC_TOL]
+    best = min(ok, key=lambda r: r["time"]) if ok else None
+    out = {
+        "rows": rows,
+        "guidance_weights": [float(w) for w in guide],
+        "iso_ok": bool(best is not None
+                       and best["time"] < base_row["time"]),
+        "iso_speedup": (None if best is None
+                        else base_row["time"] / best["time"]),
+        "iso_energy_gain": (None if best is None
+                            else base_row["energy"] / best["energy"]),
+        "best_config": None if best is None else best["config"],
+    }
+
+    # 5. inject the winning profile into a compiled arch: trained measured
+    # densities replace the synthetic schedules of act_schedules.py
+    winner = profiles[(best or base_row)["config"]]
+    arch = W.MODEL_ZOO_ARCHS[0]
+    mean_d = float(np.mean(winner.act_density))
+    comp_syn, chip2 = W.model_zoo(arch, act_density=mean_d, seed=1)
+    comp_tr, _ = W.model_zoo(arch, act_density=winner, seed=1)
+    xs2 = comp_syn.inputs(T, seed=2)
+    r_syn = simulate(comp_syn.net, xs2, chip2)
+    r_tr = simulate(comp_tr.net, xs2, chip2)
+    out["profile_injection"] = {
+        "arch": arch, "mean_density": mean_d,
+        "synthetic_time": float(r_syn.time_per_step),
+        "trained_profile_time": float(r_tr.time_per_step),
+        "time_ratio": float(r_tr.time_per_step / r_syn.time_per_step),
+    }
+
+    merge_write_json(BENCH_PATH, {"iso_accuracy": out})
+    return out
+
+
+def report(res: dict) -> str:
+    lines = ["## iso-accuracy loop — train -> profile -> mapping search"]
+    gw = ", ".join(f"{w:.2f}" for w in res["guidance_weights"])
+    lines.append(f"  floorline layer weights: [{gw}]")
+    for r in res["rows"]:
+        tag = "base" if r["baseline"] else "    "
+        lines.append(
+            f"  {tag} {r['config']:18s} acc {r['acc']:.3f}  "
+            f"act-d {r['act_density']:.3f}  w-d {r['weight_density']:.2f}  "
+            f"knee time {r['time']:8.1f}  energy {r['energy']:10.1f}")
+    sp = res["iso_speedup"]
+    lines.append(
+        f"  iso-accuracy (±{ACC_TOL:.0%}) knee speedup: "
+        f"{sp if sp is None else round(sp, 2)}x "
+        f"[{res['best_config']}]  ok={res['iso_ok']}")
+    pi = res["profile_injection"]
+    lines.append(
+        f"  profile->compiled-arch injection ({pi['arch']}): trained/"
+        f"synthetic time ratio {pi['time_ratio']:.3f} "
+        f"at mean density {pi['mean_density']:.3f}")
+    return "\n".join(lines)

@@ -62,10 +62,11 @@ def main(argv=None):
         from repro.neuromorphic import compute
         compute.DEFAULT_COMPUTE = args.compute
 
-    from benchmarks import (act_schedules, compute_floor, max_synops,
-                            model_zoo, search_mapping, sim_speed,
-                            stage1_sparsity, stage2_partitioning,
-                            tpu_roofline, traffic_mapping, weight_format,
+    from benchmarks import (act_schedules, compute_floor, iso_accuracy,
+                            max_synops, model_zoo, search_mapping,
+                            sim_speed, stage1_sparsity,
+                            stage2_partitioning, tpu_roofline,
+                            traffic_mapping, weight_format,
                             weight_sparsity)
 
     mods = [
@@ -79,6 +80,7 @@ def main(argv=None):
         ("fig8_traffic_mapping", traffic_mapping),
         ("fig10_11_stage1", stage1_sparsity),
         ("fig12_stage2", stage2_partitioning),
+        ("iso_accuracy", iso_accuracy),
         ("search_mapping", search_mapping),
         ("tpu_roofline", tpu_roofline),
     ]

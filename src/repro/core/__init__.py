@@ -15,6 +15,8 @@ from repro.core.metrics import LoadStats, WorkloadMetrics, proxy_gap
 _LAZY = {name: "repro.core.partitioner" for name in (
     "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator",
     "can_split", "optimize_partitioning")}
+_LAZY.update({name: "repro.core.guidance" for name in (
+    "LayerGuidance", "floorline_layer_guidance", "floorline_layer_weights")})
 _LAZY.update({name: "repro.core.device_search" for name in (
     "DeviceSearchEngine", "evolutionary_search_device", "generation_draws",
     "mutate_rows_array", "survival_order_array")})
@@ -40,6 +42,7 @@ __all__ = [
     "LoadStats", "WorkloadMetrics", "proxy_gap",
     "Evaluator", "OptimizationResult", "OptStep", "SimEvaluator", "can_split",
     "optimize_partitioning",
+    "LayerGuidance", "floorline_layer_guidance", "floorline_layer_weights",
     "Candidate", "EpsParetoArchive", "MoveTables", "Population",
     "SearchResult", "decode", "decode_population", "encode",
     "encode_population", "evolutionary_search", "greedy_then_evolve",

@@ -95,9 +95,21 @@ class SimEvaluator:
     def __init__(self, net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                  *, engine: str | None = None, cache=None,
                  population_backend: str = "numpy", compute=None,
-                 fault_plan=None, fallback: bool = True, retry=None):
+                 fault_plan=None, fallback: bool = True, retry=None,
+                 sparsity_profile=None):
         from repro.core.resilience import FallbackChain
         from repro.neuromorphic import timestep
+        # A trained SparsityProfile is programmed onto the network ONCE,
+        # here — every candidate, backend, and search engine (the device/
+        # sharded engines build their pricers from this evaluator's cache)
+        # then prices the profiled workload with unchanged parity.
+        if sparsity_profile is not None:
+            if cache is not None:
+                raise ValueError("sparsity_profile cannot be combined with "
+                                 "a shared cache: the cache is bound to the "
+                                 "un-profiled network")
+            net = sparsity_profile.apply(net)
+        self.sparsity_profile = sparsity_profile
         self.net, self.xs, self.profile = net, xs, profile
         self.engine = engine or timestep.DEFAULT_ENGINE
         self.population_backend = population_backend

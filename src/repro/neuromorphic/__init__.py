@@ -29,9 +29,11 @@ from repro.neuromorphic.noc import (Mapping, flow_matrix_population,
                                     router_incidence_population,
                                     strided_mapping)
 from repro.neuromorphic.timestep import (DevicePopulationPricer,
+                                         LayerStageTimes,
                                          PopulationBatch, PricingCache,
                                          SimReport, build_population_batch,
-                                         device_pricer, precompute_pricing,
+                                         device_pricer, layer_stage_times,
+                                         precompute_pricing,
                                          price_candidate,
                                          price_population_device,
                                          price_population_vmap, simulate,
@@ -49,8 +51,10 @@ __all__ = [
     "Mapping", "flow_matrix_population", "flow_structures_rows",
     "incidence_tables", "ordered_mapping", "random_mapping",
     "route_batch", "router_incidence_population", "strided_mapping",
-    "DevicePopulationPricer", "PopulationBatch", "PricingCache", "SimReport",
-    "build_population_batch", "device_pricer", "precompute_pricing",
+    "DevicePopulationPricer", "LayerStageTimes", "PopulationBatch",
+    "PricingCache", "SimReport",
+    "build_population_batch", "device_pricer", "layer_stage_times",
+    "precompute_pricing",
     "price_candidate", "price_population_device", "price_population_vmap",
     "simulate", "simulate_population",
 ]

@@ -414,6 +414,30 @@ def _resolve(arch, smoke: bool):
     return arch, arch.name, None, None
 
 
+def _resolve_densities(act_density, n_layers: int) -> list[float | None]:
+    """Per-layer message densities from a scalar, a per-layer schedule (any
+    length — resampled over normalized depth, the trained analog of
+    ``benchmarks.workloads.schedule``), or a
+    :class:`~repro.sparsity.profile.SparsityProfile`."""
+    if act_density is None:
+        return [None] * n_layers
+    if hasattr(act_density, "densities_for"):          # SparsityProfile
+        return [float(d) for d in act_density.densities_for(n_layers)]
+    if isinstance(act_density, (int, float)):
+        return [float(act_density)] * n_layers
+    seq = np.asarray(act_density, np.float64)
+    if seq.ndim != 1 or seq.size == 0:
+        raise ValueError("act_density schedule must be a non-empty 1-D "
+                         f"sequence; got shape {seq.shape}")
+    if seq.size == n_layers:
+        return [float(d) for d in seq]
+    if seq.size == 1:
+        return [float(seq[0])] * n_layers
+    src = np.linspace(0.0, 1.0, seq.size)
+    dst = np.linspace(0.0, 1.0, n_layers)
+    return [float(d) for d in np.interp(dst, src, seq)]
+
+
 def _build_layer(spec: LayerSpec, rng: np.random.Generator,
                  act_density: float | None) -> SimLayer:
     mask = _structure_mask(spec)
@@ -443,7 +467,7 @@ def _build_layer(spec: LayerSpec, rng: np.random.Generator,
 
 def compile_network(arch, *, seq_len: int = DEFAULT_SEQ_LEN,
                     smoke: bool = True, seed: int = 0,
-                    act_density: float | None = None,
+                    act_density=None,
                     recurrent_neuron: str = "ssm",
                     verify_attention: bool = False) -> CompiledNetwork:
     """Compile a registry arch id (or raw config) into a CompiledNetwork.
@@ -454,7 +478,11 @@ def compile_network(arch, *, seq_len: int = DEFAULT_SEQ_LEN,
     steady-state decode context (attention layers price
     ``min(window, seq_len)`` cache positions).  ``act_density`` programs an
     exact message density on top of the structural gates (None = the dense
-    token pipeline, the counter-exact default).  ``verify_attention`` runs
+    token pipeline, the counter-exact default); it accepts a scalar, a
+    per-layer density schedule (any length — resampled over normalized
+    depth), or a trained :class:`~repro.sparsity.profile.SparsityProfile`
+    (its measured densities drive the lowered layers — the trained
+    replacement for synthetic schedules).  ``verify_attention`` runs
     the real flash_attn kernel against its oracle at every lowered
     attention shape before returning.
     """
@@ -462,7 +490,8 @@ def compile_network(arch, *, seq_len: int = DEFAULT_SEQ_LEN,
     specs, attn_specs = lowering_spec(cfg, seq_len=seq_len,
                                       recurrent_neuron=recurrent_neuron)
     rng = np.random.default_rng(seed)
-    layers = [_build_layer(s, rng, act_density) for s in specs]
+    dens = _resolve_densities(act_density, len(specs))
+    layers = [_build_layer(s, rng, d) for s, d in zip(specs, dens)]
     net = SimNetwork(layers=layers, in_size=cfg.d_model)
     compiled = CompiledNetwork(
         net=net, cfg=cfg, name=name, arch_id=arch_id, family=family,

@@ -215,7 +215,8 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
              mapping: Mapping | None = None, *,
              engine: str | None = None,
              compute=None,
-             precomputed: tuple | None = None) -> SimReport:
+             precomputed: tuple | None = None,
+             sparsity_profile=None) -> SimReport:
     """Run the network on the simulated chip and price every timestep.
 
     Args:
@@ -232,8 +233,20 @@ def simulate(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
         (net, xs) pair should compute it once.  Batched engine only: the
         reference engine ignores it and re-runs the network step-major.
         Takes precedence over ``compute`` (the run is already done).
+      sparsity_profile: a trained
+        :class:`~repro.sparsity.profile.SparsityProfile` to program onto
+        ``net`` (via its ``apply``) before simulation — per-layer message
+        gates + weight masks; the pricing math itself is untouched, so
+        every engine/backend parity guarantee carries over.  Mutually
+        exclusive with ``precomputed`` (a functional run is net-bound).
     """
     engine = engine or DEFAULT_ENGINE
+    if sparsity_profile is not None:
+        if precomputed is not None:
+            raise ValueError("sparsity_profile cannot be combined with "
+                             "precomputed: the cached run is bound to the "
+                             "un-profiled network")
+        net = sparsity_profile.apply(net)
     part = part or minimal_partition(net, profile)
     mapping = mapping or ordered_mapping(part, profile)
     if engine == "batched":
@@ -327,12 +340,20 @@ def _neuron_csum(per_neuron: np.ndarray) -> np.ndarray:
 
 def precompute_pricing(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                        *, precomputed: tuple | None = None,
-                       compute=None) -> PricingCache:
+                       compute=None, sparsity_profile=None) -> PricingCache:
     """Run the functional network (or reuse a cached ``net.run_batch(xs)``
     result) and reduce its counter maps to per-layer cumsums.  One cache
     prices any number of (partition, mapping) candidates.  ``compute``
     selects the synaptic backend of the functional run (counters — and so
-    the cache — are exact across backends)."""
+    the cache — are exact across backends).  ``sparsity_profile`` programs
+    a trained :class:`~repro.sparsity.profile.SparsityProfile` onto ``net``
+    before the run (mutually exclusive with ``precomputed``)."""
+    if sparsity_profile is not None:
+        if precomputed is not None:
+            raise ValueError("sparsity_profile cannot be combined with "
+                             "precomputed: the cached run is bound to the "
+                             "un-profiled network")
+        net = sparsity_profile.apply(net)
     outputs, all_counters = precomputed or net.run_batch(xs, compute=compute)
     layers = []
     for l, counters in enumerate(all_counters):
@@ -396,7 +417,7 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
                         candidates, *, precomputed: tuple | None = None,
                         cache: PricingCache | None = None,
                         backend: str = "numpy",
-                        compute=None) -> list[SimReport]:
+                        compute=None, sparsity_profile=None) -> list[SimReport]:
     """Price many (partition, mapping) candidates from ONE functional run.
 
     ``candidates`` is an iterable of ``(Partition, Mapping)`` pairs.  The
@@ -433,7 +454,19 @@ def simulate_population(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
       every visible device prices its own block of rows).  Per-row parity
       with ``"device"`` to float64 roundoff; useful past pop ≈ 4k on a
       multi-device host (``docs/distributed.md``).
+
+    ``sparsity_profile`` programs a trained
+    :class:`~repro.sparsity.profile.SparsityProfile` onto ``net`` before
+    the functional run — every backend then prices the profiled workload
+    with its usual parity guarantee (mutually exclusive with ``cache`` /
+    ``precomputed``, which are bound to the un-profiled network).
     """
+    if sparsity_profile is not None:
+        if cache is not None or precomputed is not None:
+            raise ValueError("sparsity_profile cannot be combined with "
+                             "cache/precomputed: both are bound to the "
+                             "un-profiled network")
+        net = sparsity_profile.apply(net)
     cands = list(candidates)
     if not cands:
         return []
@@ -574,6 +607,67 @@ def price_candidate(net: SimNetwork, profile: ChipProfile,
         max_link_steps=max_link_steps,
         total_msgs=total_msgs, total_neuron_steps=total_neuron_steps,
         stage_votes=stage_votes)
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerStageTimes:
+    """Per-layer floorline coordinates (one row per network layer).
+
+    ``mem_time`` / ``act_time`` are the mean-over-steps memory/compute stage
+    times of the layer's slowest core (the same :func:`core_times` formulas
+    the pricer uses); ``traffic_time`` is the layer's share of the NoC
+    serialization time, apportioned by its message volume; ``msgs_out`` is
+    its mean messages per step.  These are the coordinates
+    :func:`repro.core.guidance.floorline_layer_guidance` classifies with
+    the :class:`~repro.core.floorline.FloorlineModel`.
+    """
+
+    name: str
+    mem_time: float
+    act_time: float
+    traffic_time: float
+    msgs_out: float
+
+    @property
+    def total_time(self) -> float:
+        return max(self.mem_time, self.act_time) + self.traffic_time
+
+
+def layer_stage_times(net: SimNetwork, xs: np.ndarray, profile: ChipProfile,
+                      part: Partition | None = None,
+                      mapping: Mapping | None = None, *,
+                      cache: PricingCache | None = None
+                      ) -> list[LayerStageTimes]:
+    """Decompose a priced workload into per-layer stage times.
+
+    The pricer's report localizes the bottleneck to a *stage*; this
+    decomposes it to *layers*, using the identical counter segments and
+    stage formulas (the per-layer maxima it reports are the terms whose
+    global maxima set the report's step time).  This is the measurement the
+    floorline-guided training loop weighs its regularizers with."""
+    part = part or minimal_partition(net, profile)
+    mapping = mapping or ordered_mapping(part, profile)
+    cache = cache or precompute_pricing(net, xs, profile)
+    T = cache.T
+    layer_cc = [_cached_layer_counters(cache.layers[l], part, l, T)
+                for l in range(len(cache.layers))]
+    msgs_all = np.concatenate([cc.msgs_out for cc in layer_cc], axis=1)
+    traffic = route_batch(part, mapping, msgs_all, profile)
+    traffic_time = (profile.c_route * traffic.max_router_load
+                    + profile.c_inject
+                    * traffic.inject_per_core.max(axis=1, initial=0.0))
+    layer_msgs = np.array([cc.msgs_out.sum() for cc in layer_cc], np.float64)
+    share = layer_msgs / max(layer_msgs.sum(), 1.0)
+    out = []
+    for l, cc in enumerate(layer_cc):
+        mem, act = core_times(cc, net.layers[l].neuron_model, profile)
+        out.append(LayerStageTimes(
+            name=net.layers[l].name,
+            mem_time=float(mem.max(axis=1, initial=0.0).mean()),
+            act_time=float(act.max(axis=1, initial=0.0).mean()),
+            traffic_time=float(traffic_time.mean() * share[l]),
+            msgs_out=float(layer_msgs[l] / T)))
+    return out
 
 
 # --------------------------------------------------------------- vmap backend

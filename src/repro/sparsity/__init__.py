@@ -1,9 +1,16 @@
 from repro.sparsity.regularizers import (synops_loss, tl1_regularizer,
                                          activation_density)
 from repro.sparsity.pruning import (apply_masks, magnitude_prune_masks,
-                                    prune_and_finetune_sweep)
-from repro.sparsity.sigma_delta import calibrate_thresholds
+                                    prune_and_finetune_sweep, weight_sparsity)
+from repro.sparsity.sigma_delta import (calibrate_thresholds,
+                                        delta_sparsity,
+                                        sigma_delta_densities,
+                                        sigma_delta_messages)
+from repro.sparsity.profile import SparsityProfile
 
 __all__ = ["synops_loss", "tl1_regularizer", "activation_density",
            "apply_masks", "magnitude_prune_masks",
-           "prune_and_finetune_sweep", "calibrate_thresholds"]
+           "prune_and_finetune_sweep", "weight_sparsity",
+           "calibrate_thresholds", "delta_sparsity",
+           "sigma_delta_densities", "sigma_delta_messages",
+           "SparsityProfile"]

@@ -13,19 +13,27 @@ import jax
 import jax.numpy as jnp
 
 
-def magnitude_prune_masks(params, sparsity: float, *,
-                          min_size: int = 64):
+def magnitude_prune_masks(params, sparsity, *, min_size: int = 64):
     """0/1 masks keeping the largest-|w| (1-sparsity) fraction per tensor.
-    Tensors smaller than min_size (biases, norms) are never pruned."""
+    Tensors smaller than min_size (biases, norms) and vectors are never
+    pruned.
+
+    jit-safe and exact: ``sparsity`` may be a traced scalar (only tensor
+    *shapes* — static under jit — steer the per-tensor branching), and each
+    mask keeps exactly ``round(size * (1 - sparsity))`` entries via a stable
+    descending argsort, so value ties break deterministically toward the
+    lowest flat index and jitted and eager masks are bit-identical."""
     def one(p):
-        if p.size < min_size or p.ndim < 2:
-            return jnp.ones_like(p, dtype=jnp.float32)
-        k = int(p.size * (1.0 - sparsity))
+        if p.size < min_size or p.ndim < 2:        # static: shape-only
+            return jnp.ones(p.shape, dtype=jnp.float32)
         flat = jnp.abs(p.astype(jnp.float32)).reshape(-1)
-        if k <= 0:
-            return jnp.zeros_like(p, dtype=jnp.float32)
-        thresh = jnp.sort(flat)[-k]
-        return (jnp.abs(p.astype(jnp.float32)) >= thresh).astype(jnp.float32)
+        n = flat.size
+        k = jnp.round(n * (1.0 - jnp.asarray(sparsity, jnp.float32)))
+        k = jnp.clip(k, 0, n).astype(jnp.int32)
+        order = jnp.argsort(-flat, stable=True)    # ties -> lowest index
+        keep = (jnp.arange(n, dtype=jnp.int32) < k).astype(jnp.float32)
+        mask = jnp.zeros(n, jnp.float32).at[order].set(keep)
+        return mask.reshape(p.shape)
     return jax.tree.map(one, params)
 
 

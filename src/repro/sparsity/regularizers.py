@@ -17,15 +17,28 @@ import jax
 import jax.numpy as jnp
 
 
-def tl1_regularizer(acts: list[jax.Array], a: float = 1.0) -> jax.Array:
-    """Transformed-L1 penalty over a list of (post-ReLU) activations."""
+def tl1_regularizer(acts: list[jax.Array], a: float = 1.0,
+                    weights=None) -> jax.Array:
+    """Transformed-L1 penalty over a list of (post-ReLU) activations.
+
+    ``weights`` — optional per-layer multipliers (e.g. the floorline-guided
+    weights of :func:`repro.core.guidance.floorline_layer_weights`): layer
+    ``l``'s mean penalty is scaled by ``weights[l]`` so bottleneck layers
+    are pushed toward sparsity hardest.  ``None`` keeps the unweighted
+    element-mean (exact historical behavior)."""
+    if weights is None:
+        total = jnp.float32(0.0)
+        count = 0
+        for x in acts:
+            ax = jnp.abs(x.astype(jnp.float32))
+            total = total + jnp.sum((a + 1.0) * ax / (a + ax))
+            count += x.size
+        return total / max(count, 1)
     total = jnp.float32(0.0)
-    count = 0
-    for x in acts:
+    for x, w in zip(acts, weights):
         ax = jnp.abs(x.astype(jnp.float32))
-        total = total + jnp.sum((a + 1.0) * ax / (a + ax))
-        count += x.size
-    return total / max(count, 1)
+        total = total + w * jnp.mean((a + 1.0) * ax / (a + ax))
+    return total / max(len(acts), 1)
 
 
 def activation_density(acts: list[jax.Array], thresh: float = 0.0):
@@ -37,20 +50,24 @@ def activation_density(acts: list[jax.Array], thresh: float = 0.0):
 
 
 def synops_loss(acts: list[jax.Array], fanouts: list[int],
-                surrogate: str = "abs") -> jax.Array:
-    """Expected synops: sum_l fanout_l * E[activity_l].
+                surrogate: str = "abs", weights=None) -> jax.Array:
+    """Expected synops: sum_l weight_l * fanout_l * E[activity_l].
 
     ``surrogate``: 'abs' uses |a| (differentiable proxy for spike counts /
-    message magnitude); 'count' uses a straight-through 0/1 estimate."""
+    message magnitude); 'count' uses a straight-through 0/1 estimate.
+    ``weights`` — optional per-layer multipliers (floorline guidance);
+    ``None`` is the unweighted loss (exact historical behavior)."""
+    if weights is None:
+        weights = [1.0] * len(acts)
     total = jnp.float32(0.0)
     norm = 0.0
-    for x, f in zip(acts, fanouts):
+    for x, f, w in zip(acts, fanouts, weights):
         xf = x.astype(jnp.float32)
         if surrogate == "abs":
             act = jnp.abs(xf)
         else:
             hard = (xf > 0).astype(jnp.float32)
             act = hard + xf - jax.lax.stop_gradient(xf)   # straight-through
-        total = total + f * jnp.mean(act)
+        total = total + w * f * jnp.mean(act)
         norm += f
     return total / max(norm, 1.0)

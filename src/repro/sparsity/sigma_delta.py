@@ -35,6 +35,24 @@ def calibrate_thresholds(layer_deltas: list[np.ndarray],
     return thetas
 
 
+def sigma_delta_densities(layer_acts_seq: list[np.ndarray],
+                          thetas: list[float]) -> list[float]:
+    """Message density per layer under calibrated thresholds: run the Σ-Δ
+    encoder over each layer's (T, n) activation sequence and count firing
+    messages — the measured-density column of a sigma-delta
+    :class:`~repro.sparsity.profile.SparsityProfile`."""
+    dens = []
+    for acts, theta in zip(layer_acts_seq, thetas):
+        acts = np.asarray(acts, np.float64)
+        ref = np.zeros_like(acts[0])
+        fired = 0
+        for t in range(acts.shape[0]):
+            q, ref = sigma_delta_messages(acts[t], ref, theta)
+            fired += int(np.count_nonzero(q))
+        dens.append(fired / max(acts.size, 1))
+    return dens
+
+
 def sigma_delta_messages(acts_t: np.ndarray, acts_prev: np.ndarray,
                          theta: float):
     """Quantized Σ-Δ messaging for one step: (messages, new_reference).

@@ -1,0 +1,9 @@
+"""Training loops: the distributed LM trainer (``repro.train.loop``) and
+the floorline-guided sparsity-aware trainer (``repro.train.sparse``) that
+closes the paper's iso-accuracy loop."""
+
+from repro.train.sparse import (SparseTrainConfig, SparseTrainer,
+                                deploy_mlp, mlp_fwd, mlp_init)
+
+__all__ = ["SparseTrainConfig", "SparseTrainer", "deploy_mlp", "mlp_fwd",
+           "mlp_init"]

@@ -1,0 +1,356 @@
+"""Floorline-guided sparsity-aware training (paper §VII-A, closing the loop).
+
+The paper's headline iso-accuracy gains pair *training-time* sparsification
+with the mapping optimizer.  :class:`SparseTrainer` is that training half:
+a deterministic, checkpointable MLP training loop whose sparsity
+regularizers (``tl1_regularizer`` / ``synops_loss``) are weighted per layer
+by the floorline model — the deployed workload is priced once, each layer
+is classified memory-/compute-/traffic-bound
+(:func:`repro.core.guidance.floorline_layer_weights`), and the layers that
+actually set the step time get pushed toward sparsity hardest.
+
+Three §VII-A recipes are supported, composably:
+
+* **activation regularization** — ``lam > 0`` with ``reg="tl1"`` (AKD1000)
+  or ``reg="synops"`` (Speck), floorline-weighted per layer;
+* **magnitude pruning + masked fine-tune** — ``prune_sparsity > 0``: after
+  the dense/regularized phase, one-shot
+  :func:`~repro.sparsity.pruning.magnitude_prune_masks` then
+  ``finetune_steps`` of masked training (S5);
+* **sigma-delta threshold calibration** — :meth:`calibrate_sigma_delta`
+  solves per-layer thresholds for a target message density (PilotNet).
+
+The product is a :class:`~repro.sparsity.profile.SparsityProfile` —
+measured per-layer activation densities + the exact weight masks — which
+feeds ``simulate`` / ``simulate_population`` / the evolutionary search in
+place of synthetic density schedules (``benchmarks/iso_accuracy.py``).
+
+Checkpointing uses :mod:`repro.train.checkpoint` (atomic, versioned);
+training is bit-identically resumable: the data is deterministic in
+(seed, step), the optimizer state and masks live in the checkpoint, and
+the jitted update re-runs the same program — asserted by
+``tests/test_train_sparse.py`` (kill-at-step-s == uninterrupted).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sparsity import (SparsityProfile, apply_masks,
+                            calibrate_thresholds, magnitude_prune_masks,
+                            sigma_delta_densities, synops_loss,
+                            tl1_regularizer)
+from repro.train import checkpoint as ckpt_lib
+from repro.train.data import SyntheticDenoise, SyntheticImages
+
+
+# --------------------------------------------------------------- tiny MLP
+
+def mlp_init(key, sizes):
+    """He-ish dense stack init; one weight matrix per layer, no biases."""
+    ps = []
+    for i in range(len(sizes) - 1):
+        k1, key = jax.random.split(key)
+        ps.append(jax.random.normal(k1, (sizes[i], sizes[i + 1]))
+                  / np.sqrt(sizes[i]))
+    return ps
+
+
+def mlp_fwd(ps, x):
+    """(output, hidden relu activations); acts[l] is produced by layer l."""
+    acts = []
+    h = x
+    for i, w in enumerate(ps):
+        h = h @ w
+        if i < len(ps) - 1:
+            h = jax.nn.relu(h)
+            acts.append(h)
+    return h, acts
+
+
+def deploy_mlp(ps, *, neuron_model="relu", thresholds=None,
+               sends_deltas=False):
+    """Lower trained (masked) weights into a priceable ``SimNetwork``."""
+    from repro.neuromorphic.network import SimLayer, SimNetwork
+    layers = []
+    for i, w in enumerate(ps):
+        last = i == len(ps) - 1
+        layers.append(SimLayer(
+            name=f"fc{i}", kind="fc", weights=np.asarray(w, np.float32),
+            neuron_model=neuron_model if not last else
+            ("sd_relu" if neuron_model == "sd_relu" else "relu"),
+            threshold=(thresholds[i] if thresholds is not None else
+                       (1.0 if neuron_model == "if" else 0.0)),
+            sends_deltas=sends_deltas and not last))
+    return SimNetwork(layers=layers, in_size=int(np.shape(ps[0])[0]))
+
+
+# ------------------------------------------------------------------ config
+
+@dataclasses.dataclass
+class SparseTrainConfig:
+    """One sparsity-aware training run (all phases share one step counter:
+    ``[0, steps)`` dense/regularized, ``[steps, steps + finetune_steps)``
+    masked fine-tune after the one-shot prune)."""
+
+    sizes: tuple[int, ...] = (128, 256, 128, 10)
+    task: str = "images"            # "images" | "denoise"
+    steps: int = 200
+    lam: float = 0.0                # regularizer strength (0 = dense)
+    reg: str = "tl1"                # "tl1" | "synops"
+    prune_sparsity: float = 0.0     # one-shot magnitude-prune target
+    finetune_steps: int = 0         # masked fine-tune steps after the prune
+    lr: float = 3e-3
+    batch: int = 64
+    seed: int = 0
+    min_prune_size: int = 64
+    ckpt_dir: str | None = None
+    ckpt_every: int = 0             # 0 = no checkpoints
+    ckpt_keep: int = 3
+
+    def __post_init__(self):
+        if self.prune_sparsity > 0 and self.finetune_steps < 1:
+            raise ValueError("prune_sparsity > 0 needs finetune_steps >= 1 "
+                             "(the masks are applied at the prune boundary "
+                             "inside the training loop)")
+
+    @property
+    def total_steps(self) -> int:
+        return self.steps + (self.finetune_steps
+                             if self.prune_sparsity > 0 else 0)
+
+
+class SparseTrainer:
+    """Deterministic floorline-guided sparse training loop.
+
+    ``layer_weights`` — per-hidden-layer regularizer multipliers (length
+    ``len(sizes) - 2``), typically from :meth:`floorline_weights`; ``None``
+    trains unguided (uniform weights).
+    """
+
+    def __init__(self, cfg: SparseTrainConfig, *, layer_weights=None):
+        self.cfg = cfg
+        if cfg.task == "images":
+            hw = int(round(np.sqrt(cfg.sizes[0] / 2)))
+            if hw * hw * 2 != cfg.sizes[0]:
+                raise ValueError(f"images task needs sizes[0] = 2*hw^2; "
+                                 f"got {cfg.sizes[0]}")
+            self.data = SyntheticImages(hw=hw, channels=2,
+                                        global_batch=cfg.batch,
+                                        seed=cfg.seed)
+        elif cfg.task == "denoise":
+            self.data = SyntheticDenoise(n_features=cfg.sizes[0],
+                                         seq_len=24,
+                                         global_batch=max(cfg.batch // 4, 2),
+                                         seed=cfg.seed)
+        else:
+            raise ValueError(f"unknown task {cfg.task!r}")
+        n_hidden = len(cfg.sizes) - 2
+        self.layer_weights = (None if layer_weights is None else
+                              tuple(float(w) for w in layer_weights))
+        if self.layer_weights is not None and \
+                len(self.layer_weights) != n_hidden:
+            raise ValueError(f"layer_weights must have {n_hidden} entries "
+                             f"(one per hidden layer); got "
+                             f"{len(self.layer_weights)}")
+        self.fanouts = [cfg.sizes[i + 2] for i in range(n_hidden)]
+        self.params = mlp_init(jax.random.PRNGKey(cfg.seed), cfg.sizes)
+        self.masks = [jnp.ones_like(p) for p in self.params]
+        self.opt_m = [jnp.zeros_like(p) for p in self.params]
+        self.opt_v = [jnp.zeros_like(p) for p in self.params]
+        self.step = 0
+        self.losses: list[float] = []
+        self._jit_step = jax.jit(self._update)
+
+    # ------------------------------------------------------------- batches
+    def _batch(self, t: int):
+        b = self.data.batch(t)
+        if self.cfg.task == "images":
+            return (jnp.asarray(b["x"].reshape(len(b["y"]), -1)),
+                    jnp.asarray(b["y"]))
+        n = self.cfg.sizes[0]
+        return (jnp.asarray(b["noisy"].reshape(-1, n)),
+                jnp.asarray(b["clean"].reshape(-1, n)))
+
+    # ---------------------------------------------------------------- loss
+    def _loss(self, ps, batch):
+        x, y = batch
+        out, acts = mlp_fwd(ps, x)
+        if self.cfg.task == "images":
+            task = jnp.mean(-jax.nn.log_softmax(out)[jnp.arange(len(y)), y])
+        else:
+            task = jnp.mean((out - y) ** 2)
+        if not self.cfg.lam:
+            return task
+        if self.cfg.reg == "tl1":
+            reg = tl1_regularizer(acts, weights=self.layer_weights)
+        elif self.cfg.reg == "synops":
+            reg = synops_loss(acts, self.fanouts,
+                              weights=self.layer_weights)
+        else:
+            raise ValueError(f"unknown reg {self.cfg.reg!r}")
+        return task + self.cfg.lam * reg
+
+    def _update(self, ps, m, v, masks, batch):
+        pz = [w * k for w, k in zip(ps, masks)]
+        l, g = jax.value_and_grad(self._loss)(pz, batch)
+        lr = self.cfg.lr
+        m = [0.9 * a + 0.1 * b for a, b in zip(m, g)]
+        v = [0.99 * a + 0.01 * b * b for a, b in zip(v, g)]
+        ps = [(p - lr * mm / (jnp.sqrt(vv) + 1e-8)) * k
+              for p, mm, vv, k in zip(pz, m, v, masks)]
+        return ps, m, v, l
+
+    # ------------------------------------------------------------ guidance
+    def floorline_weights(self, chip, *, probe_steps: int = 4,
+                          state_weights=None) -> np.ndarray:
+        """Per-hidden-layer regularizer weights from the floorline: deploy
+        the CURRENT weights, price a probe batch, classify each layer
+        (§VI-A) and weight traffic-/memory-bound layers hardest.  Feed the
+        result back via a new trainer's ``layer_weights``."""
+        from repro.core.guidance import floorline_layer_weights
+        net = self.deploy()
+        xs = self._probe_xs(probe_steps)
+        w = floorline_layer_weights(net, xs, chip,
+                                    state_weights=state_weights)
+        return w[:len(self.cfg.sizes) - 2]
+
+    def _probe_xs(self, steps: int) -> np.ndarray:
+        x, _ = self._batch(10_999)
+        return np.maximum(np.asarray(x[:steps], np.float32), 0.0)
+
+    # ----------------------------------------------------------- main loop
+    def train(self, *, resume: bool = False, stop_after: int | None = None
+              ) -> "SparseTrainer":
+        """Run (or resume) the full schedule.  ``stop_after`` halts once
+        the global step counter reaches it (the kill point of the
+        checkpoint-parity contract); call again with ``resume=True`` to
+        continue bit-identically."""
+        cfg = self.cfg
+        if resume:
+            if not cfg.ckpt_dir:
+                raise ValueError("resume=True needs cfg.ckpt_dir")
+            like = {"params": self.params, "m": self.opt_m, "v": self.opt_v,
+                    "masks": self.masks}
+            state, step, extra = ckpt_lib.restore(cfg.ckpt_dir, like)
+            self.params = [jnp.asarray(p) for p in state["params"]]
+            self.opt_m = [jnp.asarray(p) for p in state["m"]]
+            self.opt_v = [jnp.asarray(p) for p in state["v"]]
+            self.masks = [jnp.asarray(p) for p in state["masks"]]
+            self.step = step
+            self.losses = [float(l) for l in extra.get("losses", [])]
+        while self.step < cfg.total_steps:
+            if stop_after is not None and self.step >= stop_after:
+                break
+            if cfg.prune_sparsity > 0 and self.step == cfg.steps:
+                self.masks = jax.tree.leaves(magnitude_prune_masks(
+                    {f"w{i}": w for i, w in enumerate(self.params)},
+                    cfg.prune_sparsity, min_size=cfg.min_prune_size))
+                self.params = [w * k for w, k in
+                               zip(self.params, self.masks)]
+            self.params, self.opt_m, self.opt_v, l = self._jit_step(
+                self.params, self.opt_m, self.opt_v, self.masks,
+                self._batch(self.step))
+            self.step += 1
+            self.losses.append(float(l))
+            if (cfg.ckpt_dir and cfg.ckpt_every
+                    and self.step % cfg.ckpt_every == 0):
+                self._save()
+        if cfg.ckpt_dir and cfg.ckpt_every and self.step == cfg.total_steps:
+            self._save()
+        return self
+
+    def _save(self):
+        state = {"params": self.params, "m": self.opt_m, "v": self.opt_v,
+                 "masks": self.masks}
+        ckpt_lib.save(self.cfg.ckpt_dir, self.step, state,
+                      extra={"losses": self.losses},
+                      keep=self.cfg.ckpt_keep)
+
+    # ------------------------------------------------------------- metrics
+    def masked_params(self):
+        return [np.asarray(w * k, np.float32)
+                for w, k in zip(self.params, self.masks)]
+
+    def eval_metrics(self, *, t: int = 10_000) -> dict:
+        """Held-out task metric (training never touches step >= 10_000)."""
+        x, y = self._batch(t)
+        out, acts = mlp_fwd([jnp.asarray(p) for p in self.masked_params()],
+                            x)
+        dens = float(np.mean([np.mean(np.asarray(a) > 0) for a in acts]))
+        if self.cfg.task == "images":
+            acc = float(jnp.mean(jnp.argmax(out, -1) == y))
+            return {"acc": acc, "act_density": dens}
+        return {"mse": float(jnp.mean((out - y) ** 2)),
+                "act_density": dens}
+
+    # ------------------------------------------------------------- profile
+    def extract_profile(self, *, t: int = 10_000, meta=None
+                        ) -> SparsityProfile:
+        """Measure the trained sparsity profile on a held-out batch:
+        per-layer message densities of the DEPLOYED network (hidden relu
+        activations + positive output fraction), exact weight masks, and
+        the input stream's density."""
+        x, _ = self._batch(t)
+        ps = [jnp.asarray(p) for p in self.masked_params()]
+        out, acts = mlp_fwd(ps, x)
+        per_layer = [np.asarray(a) for a in acts] + [np.asarray(out)]
+        names = [f"fc{i}" for i in range(len(ps))]
+        return SparsityProfile.from_activations(
+            names, per_layer, masks=[np.asarray(m, np.float32)
+                                     for m in self.masks],
+            input_density=float(np.mean(np.asarray(x) > 0)),
+            meta={"task": self.cfg.task, "steps": self.step,
+                  "lam": self.cfg.lam, "reg": self.cfg.reg,
+                  "prune_sparsity": self.cfg.prune_sparsity,
+                  **(meta or {})})
+
+    def deploy(self, **kw):
+        return deploy_mlp(self.masked_params(), **kw)
+
+    # --------------------------------------------------------- sigma-delta
+    def calibrate_sigma_delta(self, target_density, *, t: int = 11_000):
+        """PilotNet recipe: solve per-layer Σ-Δ thresholds so each hidden
+        layer's message density hits ``target_density`` (scalar or
+        per-layer), measured on one held-out temporal sequence.  Returns
+        ``(profile, net)`` — the profile carries the thresholds and the
+        *measured* Σ-Δ densities; ``net`` is the deployed sigma-delta
+        network."""
+        if self.cfg.task != "denoise":
+            raise ValueError("sigma-delta calibration needs the temporal "
+                             "'denoise' task")
+        b = self.data.batch(t)
+        seq = jnp.asarray(b["noisy"][0])                   # (S, n)
+        ps = [jnp.asarray(p) for p in self.masked_params()]
+        acts_seq, h = [], seq
+        for w in ps[:-1]:
+            h = jax.nn.relu(h @ w)
+            acts_seq.append(np.asarray(h))
+        n_hidden = len(acts_seq)
+        targets = ([float(target_density)] * n_hidden
+                   if np.isscalar(target_density) else
+                   [float(d) for d in target_density])
+        deltas = [np.diff(a, axis=0).reshape(-1) for a in acts_seq]
+        thetas = calibrate_thresholds(deltas, [1.0 - d for d in targets])
+        dens = sigma_delta_densities(acts_seq, thetas)
+        out = np.asarray(acts_seq[-1] @ ps[-1])
+        names = [f"fc{i}" for i in range(len(ps))]
+        profile = SparsityProfile(
+            layer_names=names,
+            act_density=np.asarray(dens + [float(np.mean(out > 0))]),
+            weight_density=np.array([float(np.mean(np.asarray(m) != 0))
+                                     for m in self.masks]),
+            weight_masks=tuple(np.asarray(m, np.float32)
+                               for m in self.masks),
+            thresholds=tuple(thetas) + (1e-6,),
+            input_density=float(np.mean(np.asarray(seq) > 0)),
+            meta={"task": self.cfg.task, "recipe": "sigma_delta",
+                  "target_density": targets})
+        net = deploy_mlp(self.masked_params(), neuron_model="sd_relu",
+                         thresholds=list(thetas) + [1e-6],
+                         sends_deltas=True)
+        return profile, net

@@ -24,13 +24,16 @@ import numpy as np
 import pytest
 
 from repro.neuromorphic import (SimLayer, SimNetwork, compile_network,
-                                make_inputs, programmed_fc_network)
+                                fc_network, make_inputs,
+                                programmed_fc_network)
 from repro.neuromorphic.network import _exact_density_mask
+from repro.sparsity import SparsityProfile
 
 quick = pytest.mark.quick
 
 GOLDEN_DIR = pathlib.Path(__file__).parent / "golden"
 FIELDS = ("msgs_in", "macs", "fetches_dense", "msgs_out", "acts_evented")
+PROFILE_PATH = GOLDEN_DIR / "trained_profile.npz"
 
 
 # ------------------------------------------------------- workload builders
@@ -67,11 +70,56 @@ def _compiled(arch_id):
     return build
 
 
+def _make_profile() -> SparsityProfile:
+    """A stand-in trained profile, deterministic by construction (the
+    densities/masks a SparseTrainer run would have measured)."""
+    rng = np.random.default_rng(21)
+    shapes = [(32, 48), (48, 48), (48, 24)]
+    dens = (0.6, 0.8, 0.7)
+    masks = tuple(_exact_density_mask(s, d, rng).astype(np.float32)
+                  for s, d in zip(shapes, dens))
+    return SparsityProfile(layer_names=("fc0", "fc1", "fc2"),
+                           act_density=np.array([0.3, 0.45, 0.2]),
+                           weight_density=np.array(dens, np.float64),
+                           weight_masks=masks, input_density=0.3,
+                           meta={"fixture": "golden"})
+
+
+def _saved_profile() -> SparsityProfile:
+    """Round-trip through the on-disk artifact: the fixture workloads are
+    priced under the LOADED profile, so the save/load path is part of the
+    frozen contract."""
+    if not PROFILE_PATH.exists():
+        _make_profile().save(PROFILE_PATH)
+    return SparsityProfile.load(PROFILE_PATH)
+
+
+def _fc_profile_sparse():
+    """Dense fc stack under the saved trained profile: exact weight masks
+    + exact-count message gates, counters frozen."""
+    net = fc_network([32, 48, 48, 24], weight_density=1.0, seed=11)
+    net = _saved_profile().apply(net, seed=17)
+    xs = make_inputs(32, 0.3, 8, seed=12)
+    return net, xs
+
+
+def _compiled_profile(arch_id):
+    """Compiled arch with the saved profile's densities resampled across
+    its depth (the act_schedules-replacement injection path)."""
+    def build():
+        compiled = compile_network(arch_id, act_density=_saved_profile(),
+                                   seed=0)
+        return compiled.net, compiled.inputs(4, seed=5)
+    return build
+
+
 #: fixture name -> builder; one compiled smoke per family (lm/ssm/moe/encdec)
 WORKLOADS = {
     "fc_characterization": _fc_characterization,
     "conv_characterization": _conv_characterization,
+    "fc_profile_sparse": _fc_profile_sparse,
     "model_lm_gemma2": _compiled("gemma2-2b"),
+    "model_lm_gemma2_profile": _compiled_profile("gemma2-2b"),
     "model_ssm_mamba2": _compiled("mamba2-1.3b"),
     "model_moe_olmoe": _compiled("olmoe-1b-7b"),
     "model_encdec_whisper": _compiled("whisper-base"),

@@ -421,3 +421,67 @@ class TestTensorFirstRoundTrip:
             assert tuple(pm.phys) == tuple(m.phys)
             # every row is a permutation of all physical slots
             assert sorted(pop.perm[k]) == list(range(prof.n_cores))
+
+
+class TestTrainedProfileParity:
+    """Acceptance contract for trained sparsity profiles: a profile-applied
+    workload prices bit-identically on the numpy population backend (vs
+    per-candidate ``simulate``) and to float64-roundoff parity on vmap and
+    device — profile injection only rewrites the NETWORK (gates + masked
+    weights), never the pricing math, so every backend guarantee holds."""
+
+    def _profiled_workload(self, steps=3):
+        from repro.sparsity import SparsityProfile
+        rng = np.random.default_rng(31)
+        net = fc_network([48, 64, 64, 32], weight_density=1.0, seed=30)
+        masks = tuple(
+            _exact_density_mask(l.weights.shape, d, rng).astype(np.float32)
+            for l, d in zip(net.layers, (0.7, 0.5, 0.8)))
+        profile = SparsityProfile(
+            layer_names=tuple(l.name for l in net.layers),
+            act_density=np.array([0.35, 0.5, 0.2]),
+            weight_density=np.array([0.7, 0.5, 0.8]),
+            weight_masks=masks, input_density=0.4)
+        return net, profile, make_inputs(48, 0.4, steps, seed=32)
+
+    @quick
+    def test_three_way_backend_parity_under_profile(self):
+        net, profile, xs = self._profiled_workload()
+        prof = loihi2_like()
+        applied = profile.apply(net)
+        rng = np.random.default_rng(33)
+        pairs = [decode(c) for c in seeded_population(applied, prof,
+                                                      size=8, rng=rng)]
+        r_np = simulate_population(net, xs, prof, pairs,
+                                   sparsity_profile=profile)
+        r_vm = simulate_population(applied, xs, prof, pairs,
+                                   backend="vmap")
+        r_dev = simulate_population(applied, xs, prof, pairs,
+                                    backend="device")
+        for (p, m), a, b, c in zip(pairs, r_np, r_vm, r_dev):
+            ref = simulate(net, xs, prof, p, m, sparsity_profile=profile)
+            # numpy population path is BIT-identical to simulate
+            assert a.time_per_step == ref.time_per_step
+            assert a.energy_per_step == ref.energy_per_step
+            _assert_reports_close(a, b)
+            _assert_reports_close(a, c)
+
+    @quick
+    def test_profile_injection_equals_pre_applied_net(self):
+        net, profile, xs = self._profiled_workload()
+        prof = loihi2_like()
+        r1 = simulate(net, xs, prof, sparsity_profile=profile)
+        r2 = simulate(profile.apply(net), xs, prof)
+        assert r1.time_per_step == r2.time_per_step
+        assert r1.energy_per_step == r2.energy_per_step
+
+    def test_evaluator_profile_matches_applied_net(self):
+        net, profile, xs = self._profiled_workload()
+        prof = loihi2_like()
+        e1 = SimEvaluator(net, xs, prof, sparsity_profile=profile)
+        e2 = SimEvaluator(profile.apply(net), xs, prof)
+        p0 = minimal_partition(profile.apply(net), prof)
+        m0 = ordered_mapping(p0, prof)
+        a, b = e1(p0, m0), e2(p0, m0)
+        assert a.time_per_step == b.time_per_step
+        assert a.energy_per_step == b.energy_per_step

@@ -4,10 +4,13 @@ calibration (+ hypothesis property tests)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro import sparsity as sp
 from repro.sparsity.sigma_delta import delta_sparsity, sigma_delta_messages
+
+pytestmark = pytest.mark.quick
 
 
 def test_tl1_decreases_with_sparsity():
@@ -69,3 +72,97 @@ def test_sigma_delta_reconstruction_bounded():
         acts = acts + rng.standard_normal(32) * 0.3
         q, ref = sigma_delta_messages(acts, ref, theta)
     assert np.max(np.abs(ref - acts)) <= theta + 1e-9
+
+
+# ------------------------------- exact-k pruning properties (PR 9)
+
+@given(st.integers(2, 40), st.integers(2, 40), st.floats(0.0, 1.0))
+@settings(max_examples=25, deadline=None)
+def test_prune_exact_k(rows, cols, s):
+    """Kept count is round(n*(1-s)) within one element, any shape/target."""
+    w = jnp.asarray(np.random.default_rng(rows * 97 + cols)
+                    .standard_normal((rows, cols)), jnp.float32)
+    masks = sp.magnitude_prune_masks({"w": w}, s, min_size=1)
+    kept = int(jnp.sum(masks["w"]))
+    assert abs(kept - round(rows * cols * (1.0 - s))) <= 1
+    assert set(np.unique(np.asarray(masks["w"]))) <= {0.0, 1.0}
+
+
+def test_prune_respects_min_size_and_ndim():
+    params = {
+        "small": jnp.asarray(np.arange(12, dtype=np.float32).reshape(3, 4)),
+        "vec": jnp.asarray(np.arange(128, dtype=np.float32)),
+        "big": jnp.ones((16, 16), jnp.float32),
+    }
+    masks = sp.magnitude_prune_masks(params, 0.9, min_size=64)
+    assert float(jnp.min(masks["small"])) == 1.0    # size < min_size
+    assert float(jnp.min(masks["vec"])) == 1.0      # ndim < 2
+    assert float(jnp.mean(masks["big"])) < 0.2      # actually pruned
+
+
+def test_prune_tie_determinism():
+    """All-equal magnitudes: ties break toward the lowest flat index, so
+    the kept set is exactly the first k entries — twice in a row."""
+    w = jnp.ones((16, 16), jnp.float32)
+    m1 = sp.magnitude_prune_masks({"w": w}, 0.5, min_size=1)["w"]
+    m2 = sp.magnitude_prune_masks({"w": w}, 0.5, min_size=1)["w"]
+    assert np.array_equal(np.asarray(m1), np.asarray(m2))
+    flat = np.asarray(m1).reshape(-1)
+    k = int(flat.sum())
+    assert k == 128
+    assert np.all(flat[:k] == 1.0) and np.all(flat[k:] == 0.0)
+
+
+@given(st.floats(0.05, 0.95))
+@settings(max_examples=10, deadline=None)
+def test_prune_jit_eager_bit_parity(s):
+    """magnitude_prune_masks is jit-safe and bit-identical to eager."""
+    params = {"a": jnp.asarray(np.random.default_rng(7)
+                               .standard_normal((24, 24)), jnp.float32),
+              "b": jnp.asarray(np.random.default_rng(8)
+                               .standard_normal((8, 8)), jnp.float32)}
+    eager = sp.magnitude_prune_masks(params, s, min_size=1)
+    jitted = jax.jit(
+        lambda p, sv: sp.magnitude_prune_masks(p, sv, min_size=1)
+    )(params, jnp.float32(s))
+    for k in params:
+        assert np.array_equal(np.asarray(eager[k]), np.asarray(jitted[k]))
+
+
+@given(st.floats(0.2, 0.8), st.floats(0.02, 0.15))
+@settings(max_examples=10, deadline=None)
+def test_calibrate_thresholds_monotone(target, bump):
+    """Larger sparsity target never yields a smaller threshold."""
+    deltas = [np.random.default_rng(11).standard_normal(4000)]
+    lo = sp.calibrate_thresholds(deltas, float(target))[0]
+    hi = sp.calibrate_thresholds(deltas, float(min(target + bump, 0.99)))[0]
+    assert hi >= lo - 1e-12
+
+
+def test_sigma_delta_message_roundtrip():
+    """Cumulative sum of the emitted messages IS the decoder state, and it
+    tracks the activation sequence within theta at every step."""
+    rng = np.random.default_rng(5)
+    theta = 0.15
+    acts = np.cumsum(rng.standard_normal((12, 16)) * 0.2, axis=0)
+    ref = np.zeros(16)
+    msgs = []
+    for t in range(12):
+        q, ref = sigma_delta_messages(acts[t], ref, theta)
+        msgs.append(q)
+        recon = np.sum(msgs, axis=0)          # decoder: integrate messages
+        assert np.allclose(recon, ref)
+        assert np.max(np.abs(recon - acts[t])) <= theta + 1e-9
+
+
+def test_sigma_delta_densities_match_encoder():
+    rng = np.random.default_rng(6)
+    seq = np.cumsum(rng.standard_normal((10, 32)) * 0.3, axis=0)
+    seq = np.maximum(seq, 0.0)
+    dens = sp.sigma_delta_densities([seq], [0.25])[0]
+    # recount by hand
+    ref, fired = np.zeros(32), 0
+    for t in range(10):
+        q, ref = sigma_delta_messages(seq[t], ref, 0.25)
+        fired += int(np.count_nonzero(q))
+    assert dens == fired / seq.size

@@ -64,6 +64,7 @@ def test_fault_recovery(tmp_path):
     assert calls["n"] == 1
 
 
+@pytest.mark.quick
 def test_straggler_monitor():
     m = StragglerMonitor(factor=3.0)
     for i in range(10):
@@ -120,6 +121,7 @@ def test_elastic_remesh(tmp_path):
     assert l2["loss"] < l1["loss"] + 0.5
 
 
+@pytest.mark.quick
 def test_wsd_schedule_shape():
     fn = schedules.wsd(1.0, warmup=10, stable=50, decay=40)
     s = lambda i: float(fn(jnp.int32(i)))
@@ -139,6 +141,7 @@ def test_adafactor_reduces_loss():
     assert hist[-1]["loss"] < hist[0]["loss"]
 
 
+@pytest.mark.quick
 def test_adafactor_state_is_factored():
     cfg = registry.get("granite-3-2b").smoke()
     from repro.models import lm

@@ -1,0 +1,192 @@
+"""The floorline-guided sparsity-aware trainer (``repro.train.sparse``)
+and its :class:`~repro.sparsity.profile.SparsityProfile` artifact.
+
+The headline contract is checkpoint parity: killing the training loop at
+an arbitrary step and resuming from the newest checkpoint reproduces the
+uninterrupted run BIT-identically — loss curve, final masks, and the
+extracted sparsity profile all match exactly.  Around it: floorline
+guidance shape/normalization, profile save/load/apply round-trips, the
+density-resampling injection path, and the mutual-exclusion guards on
+``sparsity_profile=`` vs precomputed pricing."""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.neuromorphic import (fc_network, loihi2_like, make_inputs,
+                                precompute_pricing, simulate,
+                                simulate_population)
+from repro.sparsity import SparsityProfile
+from repro.train import SparseTrainConfig, SparseTrainer
+
+quick = pytest.mark.quick
+pytestmark = [pytest.mark.quick, pytest.mark.timeout(300)]
+
+SIZES = (32, 24, 16, 10)            # images task: 32 = 2*4^2
+
+
+def _cfg(**kw):
+    base = dict(sizes=SIZES, steps=12, batch=32, seed=0)
+    base.update(kw)
+    return SparseTrainConfig(**base)
+
+
+# ------------------------------------------------------ checkpoint parity
+
+@quick
+def test_kill_and_resume_bit_identical(tmp_path):
+    """Kill at step 8 of an 18-step prune+fine-tune schedule (checkpoint
+    cadence 5), resume in a FRESH trainer: losses, masks, params, and the
+    extracted profile must equal the uninterrupted run bit-for-bit."""
+    kw = dict(steps=12, lam=0.05, prune_sparsity=0.5, finetune_steps=6,
+              min_prune_size=1, ckpt_every=5)
+    ref = SparseTrainer(_cfg(ckpt_dir=str(tmp_path / "a"), **kw)).train()
+
+    killed = SparseTrainer(_cfg(ckpt_dir=str(tmp_path / "b"), **kw))
+    killed.train(stop_after=8)
+    assert killed.step == 8
+    resumed = SparseTrainer(_cfg(ckpt_dir=str(tmp_path / "b"), **kw))
+    resumed.train(resume=True)
+
+    assert resumed.step == ref.step == 18
+    assert resumed.losses == ref.losses
+    for a, b in zip(resumed.masks, ref.masks):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(resumed.masked_params(), ref.masked_params()):
+        assert np.array_equal(a, b)
+    pa = resumed.extract_profile()
+    pb = ref.extract_profile()
+    assert np.array_equal(pa.act_density, pb.act_density)
+    assert np.array_equal(pa.weight_density, pb.weight_density)
+    for a, b in zip(pa.weight_masks, pb.weight_masks):
+        assert np.array_equal(a, b)
+
+
+@quick
+def test_resume_needs_ckpt_dir():
+    with pytest.raises(ValueError, match="ckpt_dir"):
+        SparseTrainer(_cfg()).train(resume=True)
+
+
+def test_prune_without_finetune_rejected():
+    with pytest.raises(ValueError, match="finetune_steps"):
+        _cfg(prune_sparsity=0.5)
+
+
+# ------------------------------------------------------------- the loop
+
+@quick
+def test_training_learns_and_prunes():
+    tr = SparseTrainer(_cfg(steps=30, lam=0.02, prune_sparsity=0.5,
+                            finetune_steps=10, min_prune_size=1)).train()
+    assert tr.step == 40
+    assert np.mean(tr.losses[-5:]) < np.mean(tr.losses[:5])
+    met = tr.eval_metrics()
+    assert met["acc"] > 0.5                      # synthetic task is easy
+    dens = [float(np.mean(np.asarray(m))) for m in tr.masks]
+    assert all(abs(d - 0.5) < 0.05 for d in dens)
+
+
+def test_regularizer_cuts_activation_density():
+    dense = SparseTrainer(_cfg(steps=30)).train().eval_metrics()
+    sparse = SparseTrainer(_cfg(steps=30, lam=0.3)).train().eval_metrics()
+    assert sparse["act_density"] < dense["act_density"]
+
+
+@quick
+def test_floorline_weights_shape_and_mean():
+    tr = SparseTrainer(_cfg())
+    w = tr.floorline_weights(loihi2_like(), probe_steps=2)
+    assert w.shape == (len(SIZES) - 2,)
+    assert np.all(w > 0)
+    with pytest.raises(ValueError, match="layer_weights"):
+        SparseTrainer(_cfg(), layer_weights=[1.0])
+
+
+def test_sigma_delta_calibration_hits_target():
+    cfg = SparseTrainConfig(sizes=(16, 24, 16), task="denoise", steps=15,
+                            batch=16, seed=0)
+    tr = SparseTrainer(cfg).train()
+    profile, net = tr.calibrate_sigma_delta(0.4)
+    assert len(profile.thresholds) == 2
+    assert abs(profile.act_density[0] - 0.4) < 0.15
+    assert net.layers[0].neuron_model == "sd_relu"
+    xs = np.maximum(np.asarray(tr.data.batch(11_000)["noisy"][0]), 0.0)
+    r = simulate(net, xs, loihi2_like(), sparsity_profile=profile)
+    assert r.time_per_step > 0
+
+
+# ------------------------------------------------------- profile artifact
+
+def _profile(n=3, seed=0):
+    rng = np.random.default_rng(seed)
+    return SparsityProfile(
+        layer_names=tuple(f"fc{i}" for i in range(n)),
+        act_density=rng.uniform(0.2, 0.8, n),
+        weight_density=np.full(n, 0.5),
+        weight_masks=tuple(
+            (rng.uniform(size=(8, 8)) < 0.5).astype(np.float32)
+            for _ in range(n)),
+        input_density=0.7, meta={"seed": seed})
+
+
+@quick
+def test_profile_save_load_roundtrip(tmp_path):
+    p = _profile()
+    path = tmp_path / "p.npz"
+    p.save(path)
+    q = SparsityProfile.load(path)
+    assert q.layer_names == p.layer_names
+    assert np.array_equal(q.act_density, p.act_density)
+    assert np.array_equal(q.weight_density, p.weight_density)
+    for a, b in zip(q.weight_masks, p.weight_masks):
+        assert np.array_equal(a, b)
+    assert q.input_density == p.input_density
+    assert q.meta == p.meta
+
+
+@quick
+def test_profile_densities_resample():
+    p = _profile()
+    same = p.densities_for(3)
+    assert np.allclose(same, p.act_density)
+    up = p.densities_for(7)
+    assert len(up) == 7
+    assert up[0] == p.act_density[0] and up[-1] == p.act_density[-1]
+    one = _profile(n=1).densities_for(4)
+    assert np.allclose(one, _profile(n=1).act_density[0])
+
+
+def test_profile_apply_is_deterministic_and_gates():
+    net = fc_network([24, 20, 16, 12], weight_density=1.0, seed=3)
+    p = SparsityProfile(layer_names=("a", "b", "c"),
+                        act_density=np.array([0.25, 0.5, 1.0]),
+                        weight_density=np.array([1.0, 1.0, 1.0]))
+    n1, n2 = p.apply(net, seed=7), p.apply(net, seed=7)
+    for l1, l2 in zip(n1.layers, n2.layers):
+        assert np.array_equal(l1.msg_gate, l2.msg_gate)
+    # exact gate counts over live neurons
+    assert int(n1.layers[0].msg_gate.sum()) == round(0.25 * 20)
+    assert int(n1.layers[1].msg_gate.sum()) == round(0.5 * 16)
+    assert int(n1.layers[2].msg_gate.sum()) == 12
+
+
+# ------------------------------------------- injection exclusion guards
+
+def test_profile_precomputed_mutual_exclusion():
+    net = fc_network([16, 12, 10], weight_density=0.8, seed=1)
+    xs = make_inputs(16, 0.5, 2, seed=2)
+    prof = loihi2_like()
+    p = SparsityProfile(layer_names=("a", "b"),
+                        act_density=np.array([0.5, 0.5]),
+                        weight_density=np.array([1.0, 1.0]))
+    cache = precompute_pricing(net, xs, prof)
+    with pytest.raises(ValueError, match="sparsity_profile"):
+        simulate(net, xs, prof, precomputed=cache, sparsity_profile=p)
+    with pytest.raises(ValueError, match="sparsity_profile"):
+        simulate_population(net, xs, prof, [], cache=cache,
+                            sparsity_profile=p)
+    from repro.core.partitioner import SimEvaluator
+    with pytest.raises(ValueError, match="sparsity_profile"):
+        SimEvaluator(net, xs, prof, cache=cache, sparsity_profile=p)
