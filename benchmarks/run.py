@@ -40,6 +40,10 @@ def main(argv=None):
     ap.add_argument("--arch", default=None,
                     help="registry arch id for the model_zoo experiment "
                          "(default: one smoke arch per family)")
+    ap.add_argument("--profile", default=None, metavar="NPZ",
+                    help="saved SparsityProfile npz: the sim_speed compute "
+                         "sweep adds rows priced under its trained "
+                         "densities/masks (falls back to synthetic only)")
     ap.add_argument("--devices", type=int, default=None,
                     help="force N CPU host devices for the sharded-search "
                          "section (must run before jax initializes)")
@@ -94,6 +98,16 @@ def main(argv=None):
             res = mod.run(args.quick, stage1=stage1_res)
         elif mod is model_zoo:
             res = mod.run(args.quick, arch=args.arch)
+        elif mod is sim_speed:
+            profile = None
+            if args.profile:
+                from repro.sparsity import SparsityProfile
+                try:
+                    profile = SparsityProfile.load(args.profile)
+                except (OSError, KeyError, ValueError) as e:
+                    print(f"   [--profile {args.profile} unreadable ({e}); "
+                          "synthetic compute grid only]")
+            res = mod.run(args.quick, profile=profile)
         else:
             res = mod.run(args.quick)
         if mod is stage1_sparsity:

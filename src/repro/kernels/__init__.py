@@ -9,10 +9,16 @@ so the TPU-native adaptation is **block-granular** event-driven execution
 * ``event_matmul`` — block-sparse activation matmul: (m, k) tiles of the
   activation whose entries are all below threshold skip both the weight-tile
   fetch (HBM->VMEM DMA via scalar-prefetch index compaction) and the MXU
-  tile.  This is the synop-accumulation kernel.
+  tile.  This is the synop-accumulation kernel.  With a block-CSR
+  weight-tile occupancy map (``weight_block_occupancy``) sparsity goes 2-D:
+  (k, n) weight tiles that are all-zero are skipped too, so work scales
+  with ``act_density x weight_block_density``.
 * ``sigma_delta`` — fused sigma-delta encoder (delta, threshold, quantize,
   state update) producing the sparse message stream the paper's PilotNet
-  workload relies on [34], [46].
+  workload relies on [34], [46], plus ``window_reconstruct`` — temporal-tile
+  delta reconstruction (per-window carried accumulator + within-window
+  cumsum) replacing the dense time cumsum so quiet windows compact away
+  before the matmul ever sees them.
 
 Each kernel ships ``kernel.py`` (pl.pallas_call + BlockSpec), ``ops.py``
 (jit'd public wrapper with padding/validation) and ``ref.py`` (pure-jnp
@@ -20,8 +26,11 @@ oracle used by the test sweeps).
 """
 
 from repro.kernels.event_matmul.ops import (block_activity, event_matmul,
-                                            event_matmul_pair, pad_compact)
-from repro.kernels.sigma_delta.ops import sigma_delta_encode
+                                            event_matmul_pair, pad_compact,
+                                            weight_block_occupancy)
+from repro.kernels.sigma_delta.ops import (sigma_delta_encode,
+                                           window_reconstruct)
 
 __all__ = ["event_matmul", "event_matmul_pair", "block_activity",
-           "pad_compact", "sigma_delta_encode"]
+           "pad_compact", "weight_block_occupancy", "sigma_delta_encode",
+           "window_reconstruct"]

@@ -49,6 +49,67 @@ def _event_matmul_kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *,
         o_ref[...] = acc_ref[...].astype(out_dtype)
 
 
+def _event_matmul2_kernel(idx_ref, cnt_ref, x_ref, w_ref, o_ref, acc_ref, *,
+                          n_k_blocks: int, out_dtype):
+    """2-D (activation x weight tile) sparsity: the compacted k list is per
+    (m, n) block pair, so a grid step is skipped when EITHER the activation
+    tile is event-free OR the weight tile is all-zero."""
+    m = pl.program_id(0)
+    n = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(k < cnt_ref[m, n])
+    def _accumulate():                      # skipped: no events or no weights
+        acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                                preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k_blocks - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+def event_matmul2_pallas(x: jax.Array, w: jax.Array, idx: jax.Array,
+                         cnt: jax.Array, *, bm: int, bk: int, bn: int,
+                         out_dtype=None, interpret: bool = False) -> jax.Array:
+    """Joint-sparsity launch.  ``idx`` (Mb, Nb, Kb) int32 holds, per (m, n)
+    block pair, the compacted k-block indices live in BOTH the activation
+    row (tile has an event) and the weight column (tile has a nonzero
+    weight); ``cnt`` (Mb, Nb) int32 holds the live counts.  Padding entries
+    repeat the last live index so Mosaic's revisit detection elides their
+    copies, exactly like the 1-D kernel."""
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0
+    mb, kb, nb = M // bm, K // bk, N // bn
+    assert idx.shape == (mb, nb, kb) and cnt.shape == (mb, nb)
+    out_dtype = out_dtype or x.dtype
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(mb, nb, kb),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda m, n, k, idx, cnt: (m, idx[m, n, k])),
+            pl.BlockSpec((bk, bn), lambda m, n, k, idx, cnt: (idx[m, n, k], n)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda m, n, k, idx, cnt: (m, n)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    kernel = functools.partial(_event_matmul2_kernel, n_k_blocks=kb,
+                               out_dtype=out_dtype)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        interpret=interpret,
+        name="event_matmul2",
+    )(idx, cnt, x, w)
+
+
 def event_matmul_pallas(x: jax.Array, w: jax.Array, idx: jax.Array,
                         cnt: jax.Array, *, bm: int, bk: int, bn: int,
                         out_dtype=None, interpret: bool = False) -> jax.Array:

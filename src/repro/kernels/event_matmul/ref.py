@@ -33,6 +33,31 @@ def event_matmul_ref(x: jnp.ndarray, w: jnp.ndarray, *, threshold: float,
     return y.astype(out_dtype)
 
 
+def event_matmul2_ref(x: jnp.ndarray, w: jnp.ndarray, w_occ: jnp.ndarray, *,
+                      threshold: float, bm: int, bk: int, bn: int,
+                      out_dtype=None) -> jnp.ndarray:
+    """Oracle for 2-D (activation x weight tile) sparsity.
+
+    Semantic contract of the joint kernel: a (m, n, k) grid step contributes
+    iff the activation tile is active AND the weight tile is occupied; both
+    failures contribute exact zeros.  Implemented by zeroing inactive
+    activation tiles and unoccupied weight tiles, then one dense f32 matmul.
+    When ``w_occ`` comes from :func:`..ops.weight_block_occupancy` on ``w``
+    itself the weight zeroing is a no-op (unoccupied tiles are already
+    all-zero) — the generic form exists so tests can probe arbitrary
+    occupancy maps, including over-claimed all-zero rows.
+    """
+    out_dtype = out_dtype or x.dtype
+    active = block_activity_ref(x, threshold, bm, bk)
+    amask = jnp.repeat(jnp.repeat(active, bm, axis=0), bk, axis=1)
+    x_masked = jnp.where(amask, x, 0).astype(x.dtype)
+    wmask = jnp.repeat(jnp.repeat(w_occ, bk, axis=0), bn, axis=1)
+    w_masked = jnp.where(wmask, w, 0).astype(w.dtype)
+    y = jnp.dot(x_masked.astype(jnp.float32), w_masked.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    return y.astype(out_dtype)
+
+
 def event_stats_ref(x: jnp.ndarray, threshold: float, bm: int,
                     bk: int) -> dict:
     """Block-level event statistics — the TPU analog of the paper's synop

@@ -7,7 +7,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.sigma_delta.kernel import sigma_delta_pallas
+from repro.kernels.sigma_delta.kernel import (sigma_delta_pallas,
+                                              window_cumsum_pallas)
 
 
 @functools.partial(jax.jit, static_argnames=("theta", "bm", "bd", "interpret"))
@@ -40,3 +41,44 @@ def sigma_delta_encode(a: jax.Array, s: jax.Array, *, theta: float,
     q, s_new = sigma_delta_pallas(a2, s2, theta=theta, bm=bm, bd=bd,
                                   interpret=interpret)
     return (q[:M, :D].reshape(shape), s_new[:M, :D].reshape(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bd", "interpret"))
+def window_reconstruct(x: jax.Array, acc: jax.Array, *, window: int,
+                       bd: int = 512, interpret: bool | None = None
+                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Windowed delta reconstruction — the temporal-tile replacement for the
+    dense ``cumsum`` over the time axis of a sigma-delta input stream.
+
+    Splits the (T, n) delta batch into ``window``-step temporal tiles and
+    returns ``(bases, xwin, new_acc)`` with ``x_eff[t] == bases[t // window]
+    + xwin[t]`` (see :func:`..ref.window_reconstruct_ref`): the per-window
+    carried accumulators, the within-window cumulative sums (exact zeros
+    throughout quiet windows, computed by the Pallas kernel which skips the
+    cumsum matmul for windows with no events), and the accumulator to carry
+    into the next batch.  Downstream, ``xwin`` feeds the event matmul —
+    where its quiet windows compact away — and the ``T/window`` base rows
+    pay one small dense contraction.
+
+    ``window`` must be a multiple of 8 (f32 sublane tiling).
+    """
+    if window % 8:
+        raise ValueError(f"window must be a multiple of 8, got {window}")
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    T, n = x.shape
+    pt = (-T) % window
+    xp = jnp.pad(x.astype(jnp.float32), ((0, pt), (0, 0)))
+    xw = xp.reshape(-1, window, n)
+    ws = xw.sum(axis=1)                              # per-window totals
+    csum = jnp.cumsum(ws, axis=0)
+    bases = acc[None, :] + jnp.concatenate(
+        [jnp.zeros((1, n), csum.dtype), csum[:-1]], axis=0)
+    new_acc = acc + csum[-1]
+    live = jnp.any(xw != 0, axis=(1, 2)).astype(jnp.int32)
+    bd_eff = min(bd, -(-n // 128) * 128)             # shrink for narrow layers
+    pd = (-n) % bd_eff
+    xpd = jnp.pad(xp, ((0, 0), (0, pd)))
+    xwin = window_cumsum_pallas(xpd, live, window=window, bd=bd_eff,
+                                interpret=interpret)
+    return bases, xwin[:T, :n], new_acc

@@ -14,3 +14,29 @@ def sigma_delta_ref(a: jnp.ndarray, s: jnp.ndarray, *, theta: float
     q = jnp.where(jnp.abs(delta) >= theta,
                   jnp.round(delta / theta) * theta, 0.0)
     return q.astype(a.dtype), (s32 + q).astype(s.dtype)
+
+
+def window_reconstruct_ref(x: jnp.ndarray, acc: jnp.ndarray, *, window: int
+                           ) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Pure-jnp oracle for windowed delta reconstruction.
+
+    Decomposes the running reconstruction ``x_eff = acc + cumsum(x, time)``
+    into temporal tiles: per-window base vectors (the carried accumulator at
+    each window start) plus within-window cumulative sums, so that
+
+        x_eff[t] == bases[t // window] + xwin[t]
+
+    up to float reassociation.  Returns ``(bases (nw, n), xwin (T, n),
+    new_acc (n,))`` where ``new_acc`` is the accumulator after the batch.
+    """
+    T, n = x.shape
+    pt = (-T) % window
+    xp = jnp.pad(x, ((0, pt), (0, 0)))
+    xw = xp.reshape(-1, window, n)
+    ws = xw.sum(axis=1)                              # per-window totals
+    csum = jnp.cumsum(ws, axis=0)
+    bases = acc[None, :] + jnp.concatenate(
+        [jnp.zeros((1, n), csum.dtype), csum[:-1]], axis=0)
+    xwin = jnp.cumsum(xw, axis=1).reshape(-1, n)[:T]
+    new_acc = acc + csum[-1]
+    return bases.astype(x.dtype), xwin.astype(x.dtype), new_acc.astype(x.dtype)

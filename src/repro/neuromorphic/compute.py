@@ -63,7 +63,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.event_matmul.ops import event_matmul_pair
+from repro.kernels.event_matmul.ops import (event_matmul_pair,
+                                            weight_block_occupancy)
+from repro.kernels.sigma_delta.ops import window_reconstruct
 
 #: Backend used when a ``compute=`` argument is omitted.  ``"dense"`` is the
 #: bit-exact reference; ``benchmarks/run.py --compute`` overrides this
@@ -107,6 +109,29 @@ class LayerCompute:
         if layer.kind == "fc":
             return self.fc_forward(layer, x_eff, act_mask, msgs_in)
         return self.conv_forward(layer, x_eff, act_mask, msgs_in)
+
+    def delta_forward(self, layer, x_in: np.ndarray, in_acc: np.ndarray,
+                      act_mask: np.ndarray, msgs_in: np.ndarray):
+        """Forward for a layer whose upstream sends deltas: reconstruct the
+        effective activation from the carried accumulator, run the synaptic
+        forward, and return ``(pre, macs, fetches_dense, new_acc)``.
+
+        The base implementation is the bit-exact reference: a dense
+        cumulative sum over the time axis (sequential ``np.add.accumulate``
+        matches the step-major addition order bit for bit when the
+        accumulator starts at zero, which :meth:`SimNetwork.init_accs`
+        guarantees).  Event backends may override with temporal-tile
+        reconstruction; counters never depend on the reconstruction (they
+        derive from ``act_mask`` / ``msgs_in`` alone), so overrides change
+        ``pre`` only within the float-reassociation tolerance.
+        """
+        if np.any(in_acc):
+            x_eff = in_acc[None, :] + np.cumsum(x_in, axis=0)
+        else:
+            x_eff = np.cumsum(x_in, axis=0)
+        new_acc = x_eff[-1].copy()
+        pre, macs, fetches = self.forward(layer, x_eff, act_mask, msgs_in)
+        return pre, macs, fetches, new_acc
 
 
 # ------------------------------------------------------------------- dense
@@ -154,19 +179,83 @@ class DenseCompute(LayerCompute):
 
 # ------------------------------------------------------------------- event
 
-def _patch_weights(layer) -> tuple[np.ndarray, np.ndarray]:
+def derived_from_weights(layer, key: str, builder):
+    """Per-layer cache of data derived from ``layer.weights``, keyed on the
+    *identity of the weights array* rather than the layer object alone.
+
+    The slot stores ``(weights_ref, value)``; a cached value is served only
+    while ``layer.weights`` is still the same array object, so rebinding the
+    weights (e.g. :meth:`SparsityProfile.apply` writing masked weights onto
+    an already-simulated layer) invalidates every derived structure on the
+    next access instead of serving stale caches.  ``builder(layer)`` runs on
+    a miss.
+    """
+    slot = layer.__dict__.get(key)
+    if slot is None or slot[0] is not layer.weights:
+        slot = (layer.weights, builder(layer))
+        layer.__dict__[key] = slot
+    return slot[1]
+
+
+def _patch_weights(layer) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
     """Per-layer cache of the conv weights in im2col patch order:
-    ``(kh, kw, cin, cout) -> (cin * kh * kw, cout)`` values + nnz mask,
-    matching :func:`_im2col`'s (cin, kh, kw) feature layout.  Weights are
-    immutable after construction, so the flattening is computed once and
-    stashed on the layer."""
-    cached = layer.__dict__.get("_patch_weights")
-    if cached is None:
+    ``(kh, kw, cin, cout) -> (cin * kh * kw, cout)`` values + nnz mask +
+    per-feature-row liveness (row has >= 1 nonzero tap), matching
+    :func:`_im2col`'s (cin, kh, kw) feature layout.  Cached through
+    :func:`derived_from_weights`, so rewriting ``layer.weights`` rebuilds
+    the flattening instead of serving stale patch weights."""
+    def build(layer):
         w = np.transpose(layer.weights, (2, 0, 1, 3))
         wf = np.ascontiguousarray(w.reshape(-1, layer.weights.shape[3]))
-        cached = (wf, (wf != 0).astype(np.float32))
-        layer.__dict__["_patch_weights"] = cached
-    return cached
+        return (wf, (wf != 0).astype(np.float32), (wf != 0).any(axis=1))
+    return derived_from_weights(layer, "_patch_weights", build)
+
+
+class _WeightBlocks:
+    """Block-CSR weight-sparsity structure for one 2-D weight matrix.
+
+    ``live`` (K,) bool marks weight rows with >= 1 nonzero (CSR row
+    liveness — an input column whose row is dead fetches nothing);
+    ``occ`` / ``occ_j`` are the (Kb, Nb) weight-tile occupancy map as a
+    host array (gather mode) and device array (pallas scalar prefetch).
+    Computed once per layer from the immutable post-mask weights and cached
+    via :func:`derived_from_weights`.
+    """
+
+    __slots__ = ("live", "occ", "occ_j", "bk", "bn")
+
+    def __init__(self, w2: np.ndarray, bk: int, bn: int):
+        self.bk, self.bn = bk, bn
+        nz = w2 != 0
+        self.live = nz.any(axis=1)
+        K, N = w2.shape
+        kb, nb = -(-K // bk), -(-N // bn)
+        pad = np.zeros((kb * bk, nb * bn), bool)
+        pad[:K, :N] = nz
+        self.occ = pad.reshape(kb, bk, nb, bn).any(axis=(1, 3))
+        self.occ_j = jnp.asarray(self.occ)
+
+    @classmethod
+    def rows_only(cls, live: np.ndarray, bk: int, bn: int) -> "_WeightBlocks":
+        """Row-liveness-only structure (conv gather, where the patch-weight
+        feature axis is compacted per call so a tile map would not line up)."""
+        wb = cls.__new__(cls)
+        wb.live, wb.bk, wb.bn = live, bk, bn
+        wb.occ = np.ones((1, 1), bool)
+        wb.occ_j = None
+        return wb
+
+
+def _fc_weight_blocks(layer, bk: int, bn: int) -> _WeightBlocks:
+    return derived_from_weights(
+        layer, f"_fc_weight_blocks_{bk}x{bn}",
+        lambda l: _WeightBlocks(np.asarray(l.weights), bk, bn))
+
+
+def _conv_weight_blocks(layer, bk: int, bn: int) -> _WeightBlocks:
+    return derived_from_weights(
+        layer, f"_conv_weight_blocks_{bk}x{bn}",
+        lambda l: _WeightBlocks(_patch_weights(l)[0], bk, bn))
 
 
 def _im2col(x4: np.ndarray, kh: int, kw: int, stride: int,
@@ -208,22 +297,39 @@ class EventCompute(LayerCompute):
 
     def __init__(self, mode: str = "auto", threshold: float = 0.0,
                  bm: int = 128, bk: int = 128, bn: int = 128,
-                 gather_bm: int = 32):
+                 gather_bm: int = 32, delta_mode: str = "window",
+                 delta_window: int | None = None):
         if mode not in ("auto", "pallas", "gather"):
             raise ValueError(f"unknown event kernel mode {mode!r}")
+        if delta_mode not in ("window", "cumsum"):
+            raise ValueError(f"unknown delta mode {delta_mode!r}")
         self.mode = mode
         self.threshold = float(threshold)
         self.bm, self.bk, self.bn = bm, bk, bn
         self.gather_bm = int(gather_bm)
+        self.delta_mode = delta_mode
+        self.delta_window = delta_window
 
     def _kernel_mode(self) -> str:
         if self.mode != "auto":
             return self.mode
         return "gather" if jax.default_backend() == "cpu" else "pallas"
 
+    def _delta_window_size(self) -> int:
+        """Temporal tile length for windowed delta reconstruction: match the
+        kernel's time-tile (``bm``) in pallas mode so quiet windows line up
+        with skippable activation tiles; a sublane-aligned multiple of the
+        gather row tile otherwise."""
+        if self.delta_window is not None:
+            return int(self.delta_window)
+        if self._kernel_mode() == "pallas":
+            return self.bm
+        return max(8, self.gather_bm)
+
     # ---------------------------------------------------- event contractions
     def _gather_matmul(self, x: np.ndarray, w: np.ndarray,
-                       bm: int | None = None) -> np.ndarray:
+                       bm: int | None = None,
+                       wb: "_WeightBlocks | None" = None) -> np.ndarray:
         """Column-granular event contraction: ``x @ w`` fetching only the
         weight rows of inputs active within each ``bm``-row tile
         (``gather_bm`` timesteps by default; conv passes a larger tile
@@ -237,16 +343,34 @@ class EventCompute(LayerCompute):
         (amortized over ``bm`` rows) and MACs ``bm * k_tile * n_out`` —
         both proportional to activation density, against the dense path's
         fixed ``n_in``-wide GEMM.
+
+        With ``wb`` (the layer's :class:`_WeightBlocks`), sparsity goes 2-D
+        — the CPU expression of the same block-CSR format the pallas kernel
+        consumes: active columns whose weight row is all-zero are dropped
+        from the union (CSR row skipping — a dead row fetches nothing), and
+        output n-blocks whose occupancy is dead for every surviving k-tile
+        skip their slice of the GEMM outright.  Both skips are exact: the
+        dropped operand entries are exact zeros.
         """
         M, K = x.shape
         bm = max(1, bm or self.gather_bm)
         mask = np.abs(x) > self.threshold
+        live = mask.any(axis=0)
+        if wb is not None:
+            live &= wb.live                  # CSR row skipping
         out = np.zeros((M, w.shape[1]), np.float32)
         for i0 in range(0, M, bm):
             i1 = min(i0 + bm, M)
-            cols = np.flatnonzero(mask[i0:i1].any(axis=0))
+            cols = np.flatnonzero(mask[i0:i1].any(axis=0) & live)
             if cols.size == 0:
                 continue                     # event-free tile: no fetch
+            if wb is not None and wb.occ.shape[1] > 1:
+                nb_live = wb.occ[np.unique(cols // wb.bk)].any(axis=0)
+                if not nb_live.all():        # block-CSR n-tile skipping
+                    ncols = np.flatnonzero(
+                        np.repeat(nb_live, wb.bn)[:w.shape[1]])
+                    out[i0:i1, ncols] = x[i0:i1, cols] @ w[np.ix_(cols, ncols)]
+                    continue
             if 2 * cols.size >= K:           # near-dense tile: the compacted
                 out[i0:i1] = x[i0:i1] @ w    # GEMM wouldn't repay the copies
             else:
@@ -254,25 +378,34 @@ class EventCompute(LayerCompute):
         return out
 
     def _pair(self, x: np.ndarray, m: np.ndarray, w: np.ndarray,
-              wm: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        """(pre, macs) through the selected kernel mode."""
+              wm: np.ndarray, wb: "_WeightBlocks | None" = None
+              ) -> tuple[np.ndarray, np.ndarray]:
+        """(pre, macs) through the selected kernel mode.  ``wb`` threads the
+        layer's block-CSR weight structure into both contractions: ``wm`` is
+        the nnz mask of ``w``, so the two share one occupancy map and skip
+        exactly the same tiles — which is what keeps the counter matmul
+        bit-identical to the dense reference under weight skipping."""
         if self._kernel_mode() == "gather":
-            return (self._gather_matmul(np.asarray(x, np.float32), w),
-                    self._gather_matmul(np.asarray(m, np.float32), wm))
+            return (self._gather_matmul(np.asarray(x, np.float32), w, wb=wb),
+                    self._gather_matmul(np.asarray(m, np.float32), wm, wb=wb))
         y, macs = event_matmul_pair(
             jnp.asarray(x, jnp.float32), jnp.asarray(m, jnp.float32),
-            jnp.asarray(w), jnp.asarray(wm), threshold=self.threshold,
+            jnp.asarray(w), jnp.asarray(wm),
+            wb.occ_j if wb is not None else None, threshold=self.threshold,
             bm=self.bm, bk=self.bk, bn=self.bn)
         return np.asarray(y), np.asarray(macs)
 
     # ------------------------------------------------------------ layer kinds
     def fc_forward(self, layer, x_eff, act_mask, msgs_in):
-        pre, macs = self._pair(x_eff, act_mask, layer.weights, layer.w_mask)
+        wb = _fc_weight_blocks(layer, self.bk, self.bn)
+        pre, macs = self._pair(x_eff, act_mask, layer.weights, layer.w_mask,
+                               wb)
         fetches = np.broadcast_to(msgs_in[:, None].astype(np.float32),
                                   macs.shape)
         return pre, macs, fetches
 
-    def _conv_gather(self, a4: np.ndarray, wf: np.ndarray, layer
+    def _conv_gather(self, a4: np.ndarray, wf: np.ndarray, layer,
+                     wlive: np.ndarray | None = None
                      ) -> tuple[np.ndarray, np.ndarray]:
         """Channel-compacted gather-mode conv: input channels with no event
         anywhere in the time batch are dropped *before* the im2col copy, so
@@ -280,7 +413,13 @@ class EventCompute(LayerCompute):
         (channel-level) activation density; the per-tile column union then
         harvests the remaining fine-grained sparsity.  Returns the
         ``(T * oh * ow, cout)`` result and the per-window event row sums
-        (dropped channels are exact zeros, so both are unchanged)."""
+        (dropped channels are exact zeros, so both are unchanged).
+
+        ``wlive`` (cin * kh * kw,) feeds CSR row skipping *inside the GEMM
+        only*: feature taps whose weight row is all-zero fetch nothing, but
+        the event row sums are taken before any weight-based dropping —
+        dense fetch counts every event in the window regardless of the
+        weight mask, and that counter contract must not move."""
         kh, kw = layer.weights.shape[:2]
         cin = a4.shape[1]
         oh, ow = layer.out_hw
@@ -295,13 +434,19 @@ class EventCompute(LayerCompute):
             a4 = a4[:, ch]
             wf = np.ascontiguousarray(
                 wf.reshape(cin, kh * kw, -1)[ch].reshape(k_c * kh * kw, -1))
+            if wlive is not None:
+                wlive = np.ascontiguousarray(
+                    wlive.reshape(cin, kh * kw)[ch].reshape(-1))
         pat = _im2col(a4, kh, kw, layer.stride, oh, ow)
         rows = pat.sum(axis=1, dtype=np.float32)
+        wb = None
+        if wlive is not None and not wlive.all():
+            wb = _WeightBlocks.rows_only(wlive, self.bk, self.bn)
         # conv rows are window positions (oh*ow of them per step): tile a
         # whole timestep's windows together so the per-tile overhead stays
         # per-step, like the fc path
         return self._gather_matmul(pat, wf, bm=max(self.gather_bm,
-                                                   oh * ow)), rows
+                                                   oh * ow), wb=wb), rows
 
     def conv_forward(self, layer, x_eff, act_mask, msgs_in):
         """Event-driven conv through the im2col view: each output position's
@@ -316,22 +461,89 @@ class EventCompute(LayerCompute):
         kh, kw = layer.weights.shape[:2]
         oh, ow = layer.out_hw
         cout = layer.weights.shape[3]
-        wf, wfm = _patch_weights(layer)
+        wf, wfm, wlive = _patch_weights(layer)
         x4 = np.asarray(x_eff, np.float32).reshape(T, cin, h, w)
         m4 = np.asarray(act_mask, np.float32).reshape(T, cin, h, w)
         if self._kernel_mode() == "gather":
-            pre, _ = self._conv_gather(x4, wf, layer)
-            macs, fetch_rows = self._conv_gather(m4, wfm, layer)
+            pre, _ = self._conv_gather(x4, wf, layer, wlive)
+            macs, fetch_rows = self._conv_gather(m4, wfm, layer, wlive)
         else:
             xpat = _im2col(x4, kh, kw, layer.stride, oh, ow)
             mpat = _im2col(m4, kh, kw, layer.stride, oh, ow)
-            pre, macs = self._pair(xpat, mpat, wf, wfm)
+            pre, macs = self._pair(xpat, mpat, wf, wfm,
+                                   _conv_weight_blocks(layer, self.bk,
+                                                       self.bn))
             fetch_rows = mpat.sum(axis=1, dtype=np.float32)
         fetches = np.broadcast_to(fetch_rows[:, None], (T * oh * ow, cout))
         # (T*oh*ow, cout) -> channel-major (T, cout * oh * ow) flat maps
         to_flat = lambda a: np.transpose(
             a.reshape(T, oh, ow, cout), (0, 3, 1, 2)).reshape(T, -1)
         return to_flat(pre), to_flat(macs), to_flat(fetches)
+
+    # --------------------------------------------- temporal-tile delta path
+    def delta_forward(self, layer, x_in, in_acc, act_mask, msgs_in):
+        """Windowed delta reconstruction: instead of materializing the full
+        dense ``acc + cumsum(x_in)`` (which is dense in time even when the
+        delta stream is almost silent), split time into ``window``-step
+        tiles and exploit linearity of the synaptic forward:
+
+            x_eff = repeat(bases, window) + xwin
+            pre   = forward(bases) repeated + forward(xwin)
+
+        ``xwin`` (the within-window cumsums) is exactly zero throughout
+        quiet windows, so its event matmul skips them wholesale — temporal
+        tile sparsity; the per-window base vectors pay one small dense
+        contraction (``T / window`` rows).  Counters are computed on the
+        unchanged ``act_mask`` / ``msgs_in``, hence bit-identical to the
+        reference; ``pre`` differs only by float reassociation.
+        """
+        T = x_in.shape[0]
+        window = self._delta_window_size()
+        if self.delta_mode != "window" or T <= window:
+            return super().delta_forward(layer, x_in, in_acc, act_mask,
+                                         msgs_in)
+        if self._kernel_mode() == "pallas":
+            bases, xwin, new_acc = window_reconstruct(
+                jnp.asarray(x_in, jnp.float32),
+                jnp.asarray(in_acc, jnp.float32), window=window)
+            bases, xwin = np.asarray(bases), np.asarray(xwin)
+            new_acc = np.asarray(new_acc)
+        else:
+            bases, xwin, new_acc = _window_reconstruct_np(x_in, in_acc,
+                                                          window)
+        pre_w, macs, fetches = self.forward(layer, xwin, act_mask, msgs_in)
+        # value-only pass over the base rows: a zero event mask yields zero
+        # counters, which are discarded — only the contraction is kept
+        zmask = np.zeros_like(bases)
+        zmsgs = np.zeros(bases.shape[0], np.float32)
+        pre_b, _, _ = self.forward(layer, bases, zmask, zmsgs)
+        pre = pre_w + np.repeat(pre_b, window, axis=0)[:T]
+        return pre, macs, fetches, new_acc
+
+
+def _window_reconstruct_np(x_in: np.ndarray, acc: np.ndarray, window: int
+                           ) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Host fast path of :func:`repro.kernels.sigma_delta.ops.
+    window_reconstruct` (same decomposition, same float op order per
+    window): quiet windows are skipped outright — no cumsum rows are ever
+    computed for them — which is where the gather backend's win over the
+    dense time cumsum comes from."""
+    T, n = x_in.shape
+    pt = (-T) % window
+    xp = x_in if pt == 0 else np.concatenate(
+        [x_in, np.zeros((pt, n), np.float32)])
+    xw = xp.reshape(-1, window, n)
+    ws = xw.sum(axis=1)                        # per-window totals
+    csum = np.cumsum(ws, axis=0)
+    bases = np.empty_like(csum)
+    bases[0] = acc
+    bases[1:] = acc[None, :] + csum[:-1]
+    new_acc = acc + csum[-1]
+    live = np.flatnonzero((xw != 0).any(axis=(1, 2)))
+    xwin = np.zeros_like(xw)
+    if live.size:
+        xwin[live] = np.cumsum(xw[live], axis=1)
+    return bases, xwin.reshape(-1, n)[:T], new_acc
 
 
 # ---------------------------------------------------------------- registry

@@ -40,7 +40,6 @@ maps of either engine into per-core times and energies.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any
 
 import jax.numpy as jnp
@@ -142,24 +141,31 @@ class SimLayer:
         return int(kh * kw * cin * per)
 
     # --------------------------------------------- cached derived weight data
-    # Weights are set at construction and treated as immutable afterwards;
-    # anything derived from them is computed once per layer, not per step.
+    # Caches are keyed on the identity of the weights array (not just the
+    # layer object), so rebinding ``layer.weights`` — e.g. SparsityProfile
+    # applying a mask to an already-simulated layer — invalidates every
+    # derived structure instead of serving stale data.
 
-    @functools.cached_property
+    @property
     def w_mask(self) -> np.ndarray:
         """0/1 mask of nonzero weights (fc MAC counting)."""
-        return (self.weights != 0).astype(np.float32)
+        return _compute.derived_from_weights(
+            self, "_w_mask", lambda l: (l.weights != 0).astype(np.float32))
 
-    @functools.cached_property
+    @property
     def w_nnz(self) -> int:
         """Number of nonzero synaptic weights."""
-        return int((self.weights != 0).sum())
+        return _compute.derived_from_weights(
+            self, "_w_nnz", lambda l: int((l.weights != 0).sum()))
 
-    @functools.cached_property
+    @property
     def _conv_kernels(self) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
         """Device-resident conv kernels: (weights, nnz mask, all-ones)."""
-        wj = jnp.asarray(self.weights)
-        return wj, (wj != 0).astype(jnp.float32), jnp.ones_like(wj)
+        def build(l):
+            wj = jnp.asarray(l.weights)
+            return wj, (wj != 0).astype(jnp.float32), jnp.ones_like(wj)
+        return _compute.derived_from_weights(self, "_conv_kernels_cache",
+                                             build)
 
     def init_state(self) -> dict[str, np.ndarray]:
         n = self.n_neurons
@@ -244,24 +250,21 @@ class SimLayer:
         x_in = np.asarray(x_in, np.float32)
         if x_in.ndim != 2:
             raise ValueError(f"step_batch needs (T, n_in), got {x_in.shape}")
-        if in_acc is not None:
-            # delta reconstruction: acc_t = acc_0 + sum_{k<=t} x_k.  accs
-            # start at zero for every run, where np.cumsum (sequential
-            # np.add.accumulate) matches the step-major addition order bit
-            # for bit.
-            if np.any(in_acc):
-                x_eff = in_acc[None, :] + np.cumsum(x_in, axis=0)
-            else:
-                x_eff = np.cumsum(x_in, axis=0)
-            new_acc = x_eff[-1].copy()
-        else:
-            x_eff = x_in
-            new_acc = None
 
         act_mask = (x_in != 0).astype(np.float32)   # events on the wire
         msgs_in = act_mask.sum(axis=1)              # (T,)
 
-        pre, macs, fetches_dense = cc.forward(self, x_eff, act_mask, msgs_in)
+        if in_acc is not None:
+            # delta reconstruction (acc_t = acc_0 + sum_{k<=t} x_k) is the
+            # backend's to own: the base implementation is the bit-exact
+            # dense time cumsum; event backends reconstruct in temporal
+            # tiles so quiet windows compact away before the matmul.
+            pre, macs, fetches_dense, new_acc = cc.delta_forward(
+                self, x_in, in_acc, act_mask, msgs_in)
+        else:
+            new_acc = None
+            pre, macs, fetches_dense = cc.forward(self, x_in, act_mask,
+                                                  msgs_in)
 
         if self.bias is not None:
             pre = pre + self.bias

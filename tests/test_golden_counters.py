@@ -23,8 +23,8 @@ import pathlib
 import numpy as np
 import pytest
 
-from repro.neuromorphic import (SimLayer, SimNetwork, compile_network,
-                                fc_network, make_inputs,
+from repro.neuromorphic import (EventCompute, SimLayer, SimNetwork,
+                                compile_network, fc_network, make_inputs,
                                 programmed_fc_network)
 from repro.neuromorphic.network import _exact_density_mask
 from repro.sparsity import SparsityProfile
@@ -113,11 +113,33 @@ def _compiled_profile(arch_id):
     return build
 
 
+def _conv_fc_profile_event():
+    """Weight-masked conv+fc stack under the saved trained profile, priced
+    through the EVENT backend (gather mode — the deterministic CI path,
+    with block-CSR weight skipping engaged): the weight-sparse tile/row
+    skips must leave every counter exactly where the dense reference puts
+    it, so this fixture freezes the same integers a dense run produces."""
+    rng = np.random.default_rng(23)
+    layers, h, w, c_prev = [], 8, 8, 2
+    for i, c in enumerate((4, 8)):
+        wgt = rng.normal(0, 1 / 3.0, (3, 3, c_prev, c)).astype(np.float32)
+        layers.append(SimLayer(name=f"conv{i}", kind="conv", weights=wgt,
+                               stride=2, in_hw=(h, w)))
+        h, w, c_prev = h // 2, w // 2, c
+    wfc = rng.normal(0, 0.3, (h * w * c_prev, 12)).astype(np.float32)
+    layers.append(SimLayer(name="fc", kind="fc", weights=wfc))
+    net = _saved_profile().apply(SimNetwork(layers=layers, in_size=8 * 8 * 2),
+                                 seed=19)
+    xs = make_inputs(net.in_size, 0.3, 6, seed=24)
+    return net, xs, EventCompute(mode="gather")
+
+
 #: fixture name -> builder; one compiled smoke per family (lm/ssm/moe/encdec)
 WORKLOADS = {
     "fc_characterization": _fc_characterization,
     "conv_characterization": _conv_characterization,
     "fc_profile_sparse": _fc_profile_sparse,
+    "conv_fc_profile_event": _conv_fc_profile_event,
     "model_lm_gemma2": _compiled("gemma2-2b"),
     "model_lm_gemma2_profile": _compiled_profile("gemma2-2b"),
     "model_ssm_mamba2": _compiled("mamba2-1.3b"),
@@ -129,8 +151,10 @@ WORKLOADS = {
 def snapshot(name: str) -> dict:
     """Per-layer integer counter totals (exact: counters are integer-valued
     and well below 2**53, so float sums are lossless)."""
-    net, xs = WORKLOADS[name]()
-    _, counters = net.run_batch(xs)
+    built = WORKLOADS[name]()
+    net, xs = built[0], built[1]
+    compute = built[2] if len(built) > 2 else None
+    _, counters = net.run_batch(xs, compute=compute)
     layers = []
     for lay, c in zip(net.layers, counters):
         row = {"name": lay.name}
